@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: CSV/artifact emission, technique runners."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts")
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def bench_row(name: str, fn, *args, derived="", repeats: int = 1,
+              **kw) -> list:
+    """name,us_per_call,derived CSV row (scaffold contract)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return [name, round(us, 1), derived if derived else out]

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: jitted XLA-oracle wall time on CPU (the Pallas
+kernels are TPU-targeted; interpret mode is a correctness harness, not a
+timing one — see DESIGN.md). Emits name,us_per_call,derived rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder_lstm as net
+from repro.kernels.decode_attention import decode_attention_xla
+from repro.kernels.flash_attention import attention_xla
+from repro.kernels.mamba_scan import mamba_scan_xla
+from repro.kernels.moe_router import moe_router_xla
+
+
+def _time(fn, *args, repeats=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def rows() -> list[list]:
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    out = []
+
+    b, h, hkv, s, d = 1, 8, 2, 512, 64
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.bfloat16)
+    us = _time(attention_xla, q, k, v)
+    flops = 4 * b * h * s * s * d
+    out.append(["flash_attention_xla_512", round(us, 1),
+                f"{flops / us * 1e-3:.1f}GF/s"])
+
+    qd = jax.random.normal(ks[3], (4, h, d), jnp.bfloat16)
+    kc = jax.random.normal(ks[4], (4, hkv, 2048, d), jnp.bfloat16)
+    us = _time(decode_attention_xla, qd, kc, kc)
+    out.append(["decode_attention_xla_2k", round(us, 1),
+                f"kv_bytes={kc.nbytes * 2}"])
+
+    bl, ell, dm, n = 1, 256, 256, 16
+    u = jax.random.normal(ks[5], (bl, ell, dm), jnp.bfloat16)
+    delta = jax.nn.softplus(jax.random.normal(ks[6], (bl, ell, dm),
+                                              jnp.bfloat16))
+    a = -jnp.exp(jax.random.normal(ks[7], (dm, n)))
+    bm = jax.random.normal(ks[5], (bl, ell, n), jnp.bfloat16)
+    cm = jax.random.normal(ks[6], (bl, ell, n), jnp.bfloat16)
+    us = _time(mamba_scan_xla, u, delta, a, bm, cm, jnp.ones(dm))
+    out.append(["mamba_scan_xla_256", round(us, 1), f"L={ell} D={dm}"])
+
+    logits = jax.random.normal(ks[0], (2048, 128))
+    us = _time(moe_router_xla, logits, 8)
+    out.append(["moe_router_xla_2k_128e", round(us, 1), "top8"])
+
+    # the paper's own hot loop: batched encoder-LSTM inference
+    params = net.init_params(jax.random.PRNGKey(0), input_dim=490)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 256, 490))
+    us = _time(net.predict_sequence, params, xs)
+    out.append(["encoder_lstm_predict_256jobs", round(us, 1), "T=5"])
+    return out

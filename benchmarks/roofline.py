@@ -1,0 +1,120 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) JSON artifact:
+  compute_s    = HLO_FLOPs_per_device / 197e12        (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_device / 819e9          (HBM bw)
+  collective_s = collective_bytes_per_device / 50e9    (ICI per link)
+  bound        = argmax of the three
+  model_flops  = 6*N*D (dense) or 6*N_active*D (MoE) per step
+  ratio        = model_flops / (HLO_FLOPs * n_devices)
+
+For train cells D = tokens/step; for prefill D = prompt tokens; for decode
+D = batch (1 new token per sequence).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "artifacts", "dryrun")
+
+
+def tokens_for(rec: dict) -> float:
+    from repro.configs.shapes import SHAPES
+    shape = SHAPES[rec["shape"]]
+    if shape.kind in ("train", "prefill"):
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one token per sequence
+
+
+def analyze(rec: dict) -> dict:
+    """Three-term roofline with a two-sided memory estimate.
+
+    memory_floor_s: per-step working set (argument+temp bytes from
+    memory_analysis) / HBM bw — the fused-TPU behaviour where kernel
+    state stays in VMEM and each resident byte is touched O(1) times.
+    memory_ceil_s: the loop-aware per-op operand+result bytes — a
+    zero-fusion upper bound (wildly pessimistic for recurrent scans).
+    The bound classification and MFU use the floor; both are reported.
+    """
+    if rec.get("status") != "ok":
+        return dict(rec)
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    ws = rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+    memory_floor_s = ws / HBM_BW
+    memory_ceil_s = rec["bytes_per_device"] / HBM_BW
+    coll_s = rec["collective_bytes_per_device"]["total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_floor_s,
+             "collective": coll_s}
+    bound = max(terms, key=terms.get)
+    n_active = rec.get("active_params") or rec.get("params")
+    toks = tokens_for(rec)
+    grad_mult = 3.0 if rec["shape"].startswith("train") else 1.0
+    model_flops = 2.0 * grad_mult * n_active * toks
+    hlo_total = rec["flops_per_device"] * rec["n_devices"]
+    ratio = model_flops / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful model flops per second at the bottleneck
+    step_s = max(terms.values())
+    mfu = model_flops / (rec["n_devices"] * PEAK_FLOPS * step_s) \
+        if step_s > 0 else 0.0
+    return dict(
+        rec,
+        compute_s=compute_s, memory_s=memory_floor_s,
+        memory_ceil_s=memory_ceil_s, collective_s=coll_s,
+        bound=bound, model_flops=model_flops, useful_ratio=ratio,
+        roofline_mfu=mfu, step_s=step_s,
+    )
+
+
+def load_all(tag: str = "") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag:
+            continue
+        out.append(analyze(rec))
+    return out
+
+
+def table(tag: str = "") -> str:
+    rows = load_all(tag)
+    hdr = (f"{'arch':<22} {'shape':<12} {'mesh':<9} {'bound':<10} "
+           f"{'compute_s':>10} {'mem_floor':>10} {'mem_ceil':>10} "
+           f"{'coll_s':>10} {'MFU':>6} {'useful':>7} {'temp GiB':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:<22} {r['shape']:<12} "
+                         f"{r['mesh']:<9} SKIP: {r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:<22} {r['shape']:<12} "
+                         f"{r['mesh']:<9} ERROR: {r.get('error', '')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<9} "
+            f"{r['bound']:<10} {r['compute_s']:>10.4f} "
+            f"{r['memory_s']:>10.4f} {r['memory_ceil_s']:>10.4f} "
+            f"{r['collective_s']:>10.4f} "
+            f"{r['roofline_mfu']:>6.1%} {r['useful_ratio']:>7.2f} "
+            f"{r['memory']['temp_bytes'] / 2**30:>9.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(table(args.tag))
+
+
+if __name__ == "__main__":
+    main()

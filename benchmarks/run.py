@@ -1,0 +1,61 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract), followed
+by the figure headline summaries and — when dry-run artifacts exist — the
+roofline table. ``--full`` switches the simulator to Table-4 scale.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-sim]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale simulation (400 hosts, 288 ivals)")
+    ap.add_argument("--skip-sim", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+
+    from benchmarks.kernel_bench import rows as kernel_rows
+    for r in kernel_rows():
+        print(",".join(str(x) for x in r))
+
+    if not args.skip_sim:
+        from benchmarks import sim_experiments as S
+        t0 = time.time()
+        ctrl, warm = S._prep(args.full)
+        print(f"prep_start_training,{(time.time() - t0) * 1e6:.0f},"
+              f"epochs+warmup")
+
+        for name, fn in (("fig2_grid", S.fig2_grid_search),
+                         ("fig6_utilization", S.fig6_utilization),
+                         ("fig7_workloads", S.fig7_workloads),
+                         ("fig8_completion", S.fig8_completion_variance),
+                         ("fig9_mape", S.fig9_mape),
+                         ("fig10_overhead", S.fig10_overhead)):
+            t0 = time.time()
+            if name == "fig2_grid":
+                out = fn(args.full)
+            else:
+                out = fn(args.full, ctrl=ctrl, warm=warm)
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},{json.dumps(out)}")
+
+    try:
+        from benchmarks.roofline import table
+        t = table()
+        if t.count("\n") > 1:
+            print("\n=== Roofline (from dry-run artifacts) ===")
+            print(t)
+    except Exception as e:  # artifacts may not exist yet
+        print(f"roofline_table,0,unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Paper figure reproductions (Figs. 2, 6-10) on the cloud simulator.
+
+Scaled-down defaults (hosts/intervals) keep CPU wall-clock sane; pass
+--full for Table-4-scale runs. Every figure writes artifacts/figN*.csv and
+returns headline deltas that EXPERIMENTS.md compares against the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core import pareto
+from repro.sim import SimConfig, Simulation
+from repro.sim.metrics import mape
+from repro.sim.techniques import BASELINES, START, make
+from repro.sim.techniques.baselines import (IGRUSD, Wrangler, pretrain_igru,
+                                            pretrain_wrangler)
+from repro.sim.techniques.start_tech import pretrain
+
+QOS_KEYS = ["avg_execution_time_s", "resource_contention", "energy_kwh",
+            "sla_violation_rate", "cpu_util_pct", "ram_util_pct",
+            "disk_util_pct", "bw_util_pct"]
+
+
+def _cfg(full: bool, **kw) -> SimConfig:
+    """--full = paper scale (Table 4). Default is a scaled-down cluster;
+    arrival_rate is scaled with host count so per-host load matches the
+    paper's regime (400 VMs at lambda=1.2 is ~7-15% busy; keeping
+    lambda=1.2 on 32 hosts would be ~10x the paper's load and puts every
+    technique in a contention spiral — DESIGN.md deviations)."""
+    base = dict(n_hosts=400 if full else 32,
+                n_intervals=288 if full else 72,
+                arrival_rate=1.2 if full else 0.6,
+                seed=kw.pop("seed", 0))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _make_technique(name: str, ctrl, warmup_sim):
+    if name == "start":
+        return START(controller=ctrl)
+    t = make(name)
+    if isinstance(t, IGRUSD):
+        pretrain_igru(t, warmup_sim, epochs=60)
+    if isinstance(t, Wrangler):
+        pretrain_wrangler(t, warmup_sim)
+    return t
+
+
+def _run_all(cfg_fn, techniques, ctrl, warmup_sim, seeds=(0,)):
+    out = {}
+    for name in techniques:
+        sums = []
+        for seed in seeds:
+            cfg = cfg_fn(seed)
+            sim = Simulation(cfg, technique=_make_technique(
+                name, ctrl, warmup_sim))
+            sums.append(sim.run())
+        out[name] = {k: float(np.mean([s[k] for s in sums]))
+                     for k in QOS_KEYS}
+    return out
+
+
+def _prep(full: bool):
+    """Train START + warmup sim once, reused by every figure."""
+    train_cfg = _cfg(full, seed=7)
+    ctrl = pretrain(train_cfg, epochs=8 if not full else 30, lr=1e-3)
+    warm = Simulation(_cfg(full, seed=9))
+    warm.run()
+    return ctrl, warm
+
+
+def fig6_utilization(full: bool = False, ctrl=None, warm=None) -> dict:
+    """QoS vs reserved utilization (20-80%)."""
+    if ctrl is None:
+        ctrl, warm = _prep(full)
+    techniques = ["start"] + BASELINES + ["none"]
+    rows = []
+    results = {}
+    for res in (0.2, 0.4, 0.6, 0.8):
+        r = _run_all(lambda seed: _cfg(full, reserved_utilization=res,
+                                       seed=seed),
+                     techniques, ctrl, warm)
+        results[res] = r
+        for name, qos in r.items():
+            rows.append([res, name] + [qos[k] for k in QOS_KEYS])
+    write_csv("fig6_utilization.csv", ["reserved", "technique"] + QOS_KEYS,
+              rows)
+    return _headline(results)
+
+
+def fig7_workloads(full: bool = False, ctrl=None, warm=None) -> dict:
+    """QoS vs number of workloads (arrival-rate sweep)."""
+    if ctrl is None:
+        ctrl, warm = _prep(full)
+    techniques = ["start"] + BASELINES + ["none"]
+    rows = []
+    results = {}
+    for lam in (0.8, 1.2, 1.8, 2.4):
+        r = _run_all(lambda seed: _cfg(full, arrival_rate=lam, seed=seed),
+                     techniques, ctrl, warm)
+        results[lam] = r
+        for name, qos in r.items():
+            rows.append([lam, name] + [qos[k] for k in QOS_KEYS])
+    write_csv("fig7_workloads.csv", ["arrival_rate", "technique"]
+              + QOS_KEYS, rows)
+    return _headline(results)
+
+
+def fig8_completion_variance(full: bool = False, ctrl=None,
+                             warm=None) -> dict:
+    """Completion-time variance across workloads per technique."""
+    if ctrl is None:
+        ctrl, warm = _prep(full)
+    rows = []
+    out = {}
+    for name in ["start"] + BASELINES:
+        for res in (0.2, 0.8):
+            sim = Simulation(_cfg(full, reserved_utilization=res, seed=3),
+                             technique=_make_technique(name, ctrl, warm))
+            sim.run()
+            times = np.concatenate(
+                [r["times"] for r in sim.completed_jobs]) \
+                if sim.completed_jobs else np.zeros(1)
+            rows.append([name, res, float(times.mean()),
+                         float(times.std()), float(np.percentile(times,
+                                                                 99))])
+            out[(name, res)] = float(times.std())
+    write_csv("fig8_completion.csv",
+              ["technique", "reserved", "mean_s", "std_s", "p99_s"], rows)
+    start_std = np.mean([v for (n, _), v in out.items() if n == "start"])
+    base_std = np.mean([v for (n, _), v in out.items() if n != "start"])
+    return {"start_std": start_std, "baseline_std": base_std}
+
+
+def fig9_mape(full: bool = False, ctrl=None, warm=None) -> dict:
+    """Prediction accuracy: MAPE of START vs IGRU-SD vs RPPS."""
+    if ctrl is None:
+        ctrl, warm = _prep(full)
+    rows = []
+    out = {}
+    for name in ("start", "igru-sd", "rpps"):
+        vals = []
+        for seed in (0, 1, 2):
+            sim = Simulation(_cfg(full, seed=seed),
+                             technique=_make_technique(name, ctrl, warm))
+            sim.run()
+            actual = sim.actual_stragglers_per_interval()
+            pred = np.array(sim.log.predicted_stragglers, float)
+            m = mape(actual, pred)
+            if np.isfinite(m):
+                vals.append(m)
+        out[name] = float(np.mean(vals)) if vals else float("nan")
+        rows.append([name, out[name]])
+    write_csv("fig9_mape.csv", ["technique", "mape_pct"], rows)
+    return out
+
+
+def fig10_overhead(full: bool = False, ctrl=None, warm=None) -> dict:
+    """Decision overhead per technique amortized over task exec time."""
+    if ctrl is None:
+        ctrl, warm = _prep(full)
+    rows = []
+    out = {}
+    for name in ["start"] + BASELINES:
+        sim = Simulation(_cfg(full, seed=4),
+                         technique=_make_technique(name, ctrl, warm))
+        s = sim.run()
+        oh = s["avg_overhead_s"]
+        rel = oh / max(s["avg_execution_time_s"], 1e-9) * 100
+        rows.append([name, oh * 1e3, rel])
+        out[name] = rel
+    write_csv("fig10_overhead.csv",
+              ["technique", "overhead_ms_per_interval",
+               "pct_of_exec_time"], rows)
+    return out
+
+
+def fig2_grid_search(full: bool = False) -> dict:
+    """k / I / T grid (paper Fig. 2): F1 of straggler classification on
+    held-out jobs using MLE-fit Pareto + threshold k."""
+    cfg = _cfg(full, seed=11)
+    sim = Simulation(cfg)
+    sim.run()
+    jobs = sim.completed_jobs
+    rows = []
+    best = (None, -1.0)
+    import jax.numpy as jnp
+    for k in (1.1, 1.3, 1.5, 1.7, 2.0):
+        tp = fp = fn = 0
+        for rec in jobs:
+            times = rec["times"]
+            a, b = pareto.fit_pareto(jnp.asarray(times))
+            thr = float(pareto.straggler_threshold(a, b, k))
+            pred = times > thr
+            truth = rec["straggler"]  # ground truth at k=1.5 (paper's def)
+            tp += int((pred & truth).sum())
+            fp += int((pred & ~truth).sum())
+            fn += int((~pred & truth).sum())
+        f1 = tp / max(tp + 0.5 * (fp + fn), 1e-9)
+        rows.append([k, f1])
+        if f1 > best[1]:
+            best = (k, f1)
+    write_csv("fig2_grid.csv", ["k", "f1"], rows)
+    return {"best_k": best[0], "best_f1": best[1]}
+
+
+def _headline(results: dict) -> dict:
+    """START's % improvement vs best/worst baseline, averaged over the
+    sweep variable (the paper's Figs. 6-7 headline numbers)."""
+    gains: dict = {}
+    for k in ("avg_execution_time_s", "resource_contention", "energy_kwh",
+              "sla_violation_rate"):
+        deltas_best, deltas_worst = [], []
+        for _, r in results.items():
+            s = r["start"][k]
+            base = [r[n][k] for n in BASELINES]
+            if min(base) > 0:
+                deltas_best.append(100 * (min(base) - s) / min(base))
+                deltas_worst.append(100 * (max(base) - s) / max(base))
+        gains[k] = {"vs_best_baseline_pct": float(np.mean(deltas_best)),
+                    "vs_worst_baseline_pct": float(np.mean(deltas_worst))}
+    return gains

@@ -1,0 +1,40 @@
+"""Paper-scenario example: full technique comparison on the cloud
+simulator (a fast version of benchmarks Figs. 6-10).
+
+    PYTHONPATH=src python examples/cloud_straggler_sim.py
+"""
+import numpy as np
+
+from repro.sim import SimConfig, Simulation
+from repro.sim.techniques import BASELINES, START, make
+from repro.sim.techniques.baselines import (IGRUSD, Wrangler, pretrain_igru,
+                                            pretrain_wrangler)
+from repro.sim.techniques.start_tech import pretrain
+
+cfg_train = SimConfig(n_hosts=24, n_intervals=60, seed=7)
+print("pretraining START's Encoder-LSTM on a random-scheduler run...")
+ctrl = pretrain(cfg_train, epochs=8, lr=1e-3)
+warm = Simulation(SimConfig(n_hosts=24, n_intervals=60, seed=9))
+warm.run()
+
+print(f"{'technique':>12} {'exec_s':>8} {'contention':>10} "
+      f"{'energy_kwh':>10} {'sla_viol':>8}")
+for name in ["none"] + BASELINES + ["start"]:
+    if name == "start":
+        tech = START(controller=ctrl)
+    else:
+        tech = make(name)
+        if isinstance(tech, IGRUSD):
+            pretrain_igru(tech, warm, epochs=40)
+        if isinstance(tech, Wrangler):
+            pretrain_wrangler(tech, warm)
+    vals = []
+    for seed in (1, 2):
+        sim = Simulation(SimConfig(n_hosts=24, n_intervals=80, seed=seed),
+                         technique=tech if seed == 1 else tech)
+        vals.append(sim.run())
+    s = {k: float(np.mean([v[k] for v in vals])) for k in vals[0]
+         if isinstance(vals[0][k], (int, float))}
+    print(f"{name:>12} {s['avg_execution_time_s']:8.1f} "
+          f"{s['resource_contention']:10.2f} {s['energy_kwh']:10.2f} "
+          f"{s['sla_violation_rate']:8.3f}")

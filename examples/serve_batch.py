@@ -1,0 +1,14 @@
+"""Batched serving example: continuous batching over a reduced model with
+START replica re-dispatch telemetry.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    out = serve_main(["--arch", "demo-100m", "--reduced",
+                      "--requests", "8", "--max-new", "10",
+                      "--slots", "3", "--replicas", "3"])
+    sys.exit(0 if out["requests_done"] == 8 else 1)

@@ -1,0 +1,5 @@
+"""repro — START (Tuli et al. 2021) straggler prediction/mitigation,
+reproduced faithfully and integrated as a first-class service of a
+multi-pod JAX training/serving framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,4 @@
+"""The paper's own model: the Encoder-LSTM straggler predictor (START §3.2)
+— not an LM; configured via repro.core. Kept here so --arch paper works in
+the launcher for the simulation/benchmark paths."""
+PAPER = dict(n_hosts=400, max_tasks=10, k=1.5, horizon=5)

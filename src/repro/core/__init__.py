@@ -1,0 +1,9 @@
+"""START core: Pareto straggler model + Encoder-LSTM predictor + mitigation."""
+from repro.core import encoder_lstm, features, mitigation, pareto
+from repro.core.predictor import Prediction, StragglerPredictor
+from repro.core.start import JobView, STARTController
+
+__all__ = [
+    "encoder_lstm", "features", "mitigation", "pareto",
+    "Prediction", "StragglerPredictor", "JobView", "STARTController",
+]

@@ -1,0 +1,208 @@
+"""Encoder-LSTM straggler-prediction network (paper §3.2, Fig. 4) in pure JAX.
+
+Architecture (faithful to the paper):
+  - Encoder: 4 fully-connected layers, softplus activations:
+        input(|M_H| + |M_T|) -> 128 -> 128 -> 32
+    (the first "layer" in the paper is the input layer with softplus applied;
+    we apply softplus after each of the four affine maps).
+  - LSTM: 2 layers, hidden size 32. eta_0 = 0.
+  - Head: FC(2); alpha = relu(o0) + 1 (so the Pareto mean exists),
+    beta = relu(o1) + BETA_EPS (strictly positive scale).
+  - Inputs are EMA-smoothed with weight EMA_W = 0.8 on the newest matrices
+    (paper cites [36]); the cell is iterated every I seconds for T seconds.
+
+Params are plain dict pytrees; everything is jit/vmap-friendly. The fused
+Pallas kernel in ``repro.kernels.lstm_cell`` implements the same cell; tests
+assert exact agreement with ``lstm_cell_apply`` below.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMA_W = 0.8          # weight of the *latest* resource matrix (paper §3.2)
+BETA_EPS = 1e-3      # strictly-positive Pareto scale
+ENC_HIDDEN = 128
+ENC_OUT = 32
+LSTM_HIDDEN = 32
+LSTM_LAYERS = 2
+
+Params = dict  # pytree
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(n_in))
+    wkey, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wkey, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _lstm_init(key, n_in, hidden):
+    k1, k2 = jax.random.split(key)
+    s_in = 1.0 / jnp.sqrt(n_in)
+    s_h = 1.0 / jnp.sqrt(hidden)
+    return {
+        # gates packed as [i, f, g, o] along the last dim
+        "wx": jax.random.normal(k1, (n_in, 4 * hidden), jnp.float32) * s_in,
+        "wh": jax.random.normal(k2, (hidden, 4 * hidden), jnp.float32) * s_h,
+        "b": jnp.zeros((4 * hidden,), jnp.float32),
+    }
+
+
+def init_params(key: jax.Array, input_dim: int,
+                enc_hidden: int = ENC_HIDDEN, enc_out: int = ENC_OUT,
+                lstm_hidden: int = LSTM_HIDDEN,
+                lstm_layers: int = LSTM_LAYERS) -> Params:
+    keys = jax.random.split(key, 4 + lstm_layers + 1)
+    enc = [
+        _dense_init(keys[0], input_dim, enc_hidden),
+        _dense_init(keys[1], enc_hidden, enc_hidden),
+        _dense_init(keys[2], enc_hidden, enc_hidden),
+        _dense_init(keys[3], enc_hidden, enc_out),
+    ]
+    lstm = []
+    n_in = enc_out
+    for i in range(lstm_layers):
+        lstm.append(_lstm_init(keys[4 + i], n_in, lstm_hidden))
+        n_in = lstm_hidden
+    head = _dense_init(keys[4 + lstm_layers], lstm_hidden, 2)
+    return {"enc": enc, "lstm": lstm, "head": head}
+
+
+def encoder_apply(params: Params, x: jax.Array) -> jax.Array:
+    """4-layer softplus MLP (paper's Encoder network)."""
+    h = x
+    for layer in params["enc"]:
+        h = jax.nn.softplus(h @ layer["w"] + layer["b"])
+    return h
+
+
+def lstm_cell_apply(layer: Params, h: jax.Array, c: jax.Array,
+                    x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One LSTM cell step; gates packed [i, f, g, o]."""
+    z = x @ layer["wx"] + h @ layer["wh"] + layer["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array  # (layers, ..., hidden)
+    c: jax.Array
+
+
+def init_state(params: Params, batch_shape: tuple = ()) -> LSTMState:
+    layers = len(params["lstm"])
+    hidden = params["lstm"][0]["wh"].shape[0]
+    z = jnp.zeros((layers, *batch_shape, hidden), jnp.float32)
+    return LSTMState(h=z, c=z)
+
+
+def step(params: Params, state: LSTMState, x: jax.Array
+         ) -> tuple[LSTMState, jax.Array]:
+    """One inference step: encoder -> stacked LSTM -> (alpha, beta) head."""
+    lam = encoder_apply(params, x)
+    hs, cs = [], []
+    inp = lam
+    for li, layer in enumerate(params["lstm"]):
+        h_new, c_new = lstm_cell_apply(layer, state.h[li], state.c[li], inp)
+        hs.append(h_new)
+        cs.append(c_new)
+        inp = h_new
+    new_state = LSTMState(h=jnp.stack(hs), c=jnp.stack(cs))
+    out = inp @ params["head"]["w"] + params["head"]["b"]
+    # positivity head: the paper uses ReLU (+1 on alpha); we use softplus —
+    # same constraint, but a ReLU alpha-head that initializes negative is
+    # DEAD (alpha pinned to 1.0 -> E_S ~ 0 -> START never mitigates).
+    # Deviation noted in DESIGN.md.
+    alpha = jax.nn.softplus(out[..., 0]) + 1.0
+    beta = jax.nn.softplus(out[..., 1]) + BETA_EPS
+    return new_state, jnp.stack([alpha, beta], axis=-1)
+
+
+def ema_smooth(seq: jax.Array, w: float = EMA_W) -> jax.Array:
+    """Exponential moving average along axis 0 with weight w on the newest
+    element (paper §3.2): s_t = w*x_t + (1-w)*s_{t-1}, s_0 = x_0."""
+
+    def f(carry, x):
+        s = w * x + (1.0 - w) * carry
+        return s, s
+
+    _, out = jax.lax.scan(f, seq[0], seq)
+    return out.at[0].set(seq[0])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def predict_sequence(params: Params, xs: jax.Array) -> jax.Array:
+    """Run the net over a (T, ..., input_dim) EMA-smoothed feature sequence.
+
+    Returns the final-step (alpha, beta), shape (..., 2). This is the paper's
+    "send matrices for T seconds every I seconds; read (alpha, beta) at the
+    end" loop, with T = xs.shape[0] steps.
+    """
+    xs = ema_smooth(xs)
+    batch_shape = xs.shape[1:-1]
+    state = init_state(params, batch_shape)
+
+    def f(state, x):
+        state, out = step(params, state, x)
+        return state, out
+
+    _, outs = jax.lax.scan(f, state, xs)
+    return outs[-1]
+
+
+# ------------------------------- training ---------------------------------
+
+
+def mse_loss(params: Params, xs: jax.Array, targets: jax.Array) -> jax.Array:
+    """MSE between predicted (alpha, beta) and MLE-fitted targets (paper §4.4:
+    'trained using Mean-Square-Error Loss between the values based on the
+    predicted distribution and the actual data')."""
+    pred = predict_sequence(params, xs)
+    return jnp.mean((pred - targets) ** 2)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam_init(params: Params) -> AdamState:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=z,
+                     nu=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def adam_update(params: Params, grads: Params, state: AdamState,
+                lr: float = 1e-5, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8) -> tuple[Params, AdamState]:
+    """Adam (paper §4.4 uses Adam with lr 1e-5)."""
+    t = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - b1 ** tf
+    bc2 = 1 - b2 ** tf
+    params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, mu, nu)
+    return params, AdamState(step=t, mu=mu, nu=nu)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def train_step(params: Params, opt: AdamState, xs: jax.Array,
+               targets: jax.Array, lr: float = 1e-5
+               ) -> tuple[Params, AdamState, jax.Array]:
+    loss, grads = jax.value_and_grad(mse_loss)(params, xs, targets)
+    params, opt = adam_update(params, grads, opt, lr=lr)
+    return params, opt, loss

@@ -1,0 +1,80 @@
+"""Feature extractor (paper §3.2, Fig. 3): host matrix M_H and task matrix M_T.
+
+Host features (m = 11 per host): utilization and capacity of CPU, RAM, disk
+and network bandwidth, plus cost, (max) power and the number of tasks
+currently allocated — exactly the set listed in the paper.
+
+Task features (p = 5 per task): CPU, RAM, disk and bandwidth *requirements*
+plus the host assigned in the previous interval (normalized index; -1 -> 0
+for unassigned). Jobs with q < q' tasks are padded with zero rows (paper:
+"if less than q' tasks then rest q'-q rows are 0").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HOST_FEATURES = 11
+TASK_FEATURES = 5
+
+
+def host_matrix(util: jax.Array, cap: jax.Array, cost: jax.Array,
+                power_max: jax.Array, n_tasks: jax.Array) -> jax.Array:
+    """Build M_H.
+
+    Args:
+        util: (n, 4) utilization in [0,1] for cpu/ram/disk/bw.
+        cap:  (n, 4) capacities (absolute units).
+        cost: (n,) price per interval.
+        power_max: (n,) watts at full load.
+        n_tasks: (n,) tasks currently placed on each host.
+
+    Returns: (n, HOST_FEATURES) float32, capacities normalized per column.
+    """
+    cap = jnp.asarray(cap, jnp.float32)
+    cap_n = cap / jnp.maximum(cap.max(axis=0, keepdims=True), 1e-8)
+    cost = jnp.asarray(cost, jnp.float32)
+    cost_n = cost / jnp.maximum(cost.max(), 1e-8)
+    p = jnp.asarray(power_max, jnp.float32)
+    p_n = p / jnp.maximum(p.max(), 1e-8)
+    nt = jnp.asarray(n_tasks, jnp.float32)
+    nt_n = nt / jnp.maximum(nt.max(), 1.0)
+    return jnp.concatenate(
+        [jnp.asarray(util, jnp.float32), cap_n,
+         cost_n[:, None], p_n[:, None], nt_n[:, None]], axis=-1)
+
+
+def task_matrix(req: jax.Array, prev_host: jax.Array, n_hosts: int,
+                max_tasks: int) -> jax.Array:
+    """Build M_T for one job, padded to (max_tasks, TASK_FEATURES).
+
+    Args:
+        req: (q, 4) resource requirements (cpu/ram/disk/bw) in [0,1].
+        prev_host: (q,) host index of the previous interval, -1 if none.
+        n_hosts: for normalizing the host index.
+        max_tasks: q' — pad rows beyond q with zeros.
+    """
+    req = jnp.asarray(req, jnp.float32)
+    q = req.shape[0]
+    ph = (jnp.asarray(prev_host, jnp.float32) + 1.0) / float(n_hosts)
+    mt = jnp.concatenate([req, ph[:, None]], axis=-1)
+    pad = max(0, max_tasks - q)
+    mt = jnp.pad(mt, ((0, pad), (0, 0)))[:max_tasks]
+    return mt
+
+
+def flatten_inputs(m_h: jax.Array, m_t: jax.Array) -> jax.Array:
+    """Flatten + concatenate (M_H, M_T) into the encoder input vector.
+
+    Supports leading batch/time dims on either matrix as long as they match.
+    """
+    lead_h = m_h.shape[:-2]
+    lead_t = m_t.shape[:-2]
+    assert lead_h == lead_t, (lead_h, lead_t)
+    h = m_h.reshape(*lead_h, -1)
+    t = m_t.reshape(*lead_t, -1)
+    return jnp.concatenate([h, t], axis=-1)
+
+
+def input_dim(n_hosts: int, max_tasks: int) -> int:
+    return n_hosts * HOST_FEATURES + max_tasks * TASK_FEATURES

@@ -1,0 +1,135 @@
+"""Pareto distribution model of task execution times (paper §3.1, Eqs. 1-5).
+
+Task execution times X_1..X_q of a job are modelled as Pareto(alpha, beta):
+    F_X(x) = 1 - (x/beta)^(-alpha)   for x >= beta,   else 0.
+
+MLE (Eqs. 2-3):  beta = min_i X_i,   alpha = q / (sum_i log X_i - q log beta).
+
+Straggler threshold (paper keeps it a multiple of the Pareto mean):
+    K = k * alpha * beta / (alpha - 1),     k = 1.5 by default.
+
+Expected number of stragglers (Eq. 4):  E_S = q * (K / beta)^(-alpha).
+
+All functions are pure jnp, jit-able, and batched variants support padded
+task arrays via masks (the paper pads jobs with q < q' tasks with zero rows).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_K = 1.5  # paper §3.1: empirically best F1 (Fig. 2)
+_EPS = 1e-8
+_ALPHA_MIN = 1.0 + 1e-3  # mean of Pareto only defined for alpha > 1
+_ALPHA_MAX = 1e4
+
+
+def pareto_cdf(x: jax.Array, alpha: jax.Array, beta: jax.Array) -> jax.Array:
+    """Eq. 1. CDF of Pareto(alpha, beta)."""
+    x = jnp.asarray(x)
+    safe = jnp.maximum(x, beta)
+    cdf = 1.0 - (safe / beta) ** (-alpha)
+    return jnp.where(x >= beta, cdf, 0.0)
+
+
+def pareto_mean(alpha: jax.Array, beta: jax.Array) -> jax.Array:
+    """Mean of Pareto(alpha, beta); defined for alpha > 1."""
+    return alpha * beta / (alpha - 1.0)
+
+
+def sample_pareto(key: jax.Array, alpha: jax.Array, beta: jax.Array,
+                  shape: tuple) -> jax.Array:
+    """Inverse-CDF sampling: X = beta * U^(-1/alpha)."""
+    u = jax.random.uniform(key, shape, minval=_EPS, maxval=1.0)
+    return beta * u ** (-1.0 / alpha)
+
+
+def fit_pareto(times: jax.Array, mask: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """MLE fit of (alpha, beta) from task times (Eq. 3).
+
+    Args:
+        times: (..., q) positive task execution times. Padded entries allowed
+            when ``mask`` marks them 0.
+        mask: optional (..., q) in {0,1}; 1 = real task.
+
+    Returns:
+        (alpha, beta) with shapes (...,). alpha clipped to
+        [1+1e-3, 1e4] so the distribution mean exists (paper adds +1 to the
+        network's alpha output for the same reason).
+    """
+    times = jnp.asarray(times, jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(times)
+    mask = mask.astype(jnp.float32)
+    q = jnp.maximum(mask.sum(-1), 1.0)
+    # beta = min over real tasks (paper: largest beta s.t. X_i >= beta)
+    big = jnp.where(mask > 0, times, jnp.inf)
+    beta = jnp.clip(jnp.min(big, axis=-1), _EPS, None)
+    logs = jnp.where(mask > 0, jnp.log(jnp.maximum(times, _EPS)), 0.0)
+    denom = logs.sum(-1) - q * jnp.log(beta)
+    alpha = q / jnp.maximum(denom, _EPS)
+    return jnp.clip(alpha, _ALPHA_MIN, _ALPHA_MAX), beta
+
+
+def straggler_threshold(alpha: jax.Array, beta: jax.Array,
+                        k: float = DEFAULT_K) -> jax.Array:
+    """K = k * mean = k * alpha*beta/(alpha-1)  (paper §3.1)."""
+    return k * pareto_mean(alpha, beta)
+
+
+def expected_stragglers(q: jax.Array, alpha: jax.Array, beta: jax.Array,
+                        k: float = DEFAULT_K) -> jax.Array:
+    """E_S = q * (K/beta)^(-alpha)  (Eq. 4).
+
+    Note K/beta = k*alpha/(alpha-1) is beta-free: the *count* of expected
+    stragglers depends only on the tail index; beta sets the scale of K.
+    """
+    kk = straggler_threshold(alpha, beta, k) / beta
+    return q * kk ** (-alpha)
+
+
+def straggler_labels(times: jax.Array, alpha: jax.Array, beta: jax.Array,
+                     k: float = DEFAULT_K) -> jax.Array:
+    """Ground-truth straggler flags: completion time > K (paper §3.1)."""
+    kthr = straggler_threshold(alpha, beta, k)
+    return (times > kthr[..., None]).astype(jnp.float32)
+
+
+def f1_score_paper(tp: jax.Array, fp: jax.Array) -> jax.Array:
+    """Eq. 5 as literally printed: tp / (tp + 0.5*(fp + tp)).
+
+    The paper counts correct class labels as tp and incorrect as fp (so fp
+    absorbs fn); its Eq. 5 is the standard F1 with that convention.
+    """
+    return tp / jnp.maximum(tp + 0.5 * (fp + tp), _EPS)
+
+
+def f1_score(pred: jax.Array, truth: jax.Array,
+             mask: jax.Array | None = None) -> jax.Array:
+    """Standard binary F1 over (possibly masked) flags, used for Fig. 2."""
+    if mask is None:
+        mask = jnp.ones_like(pred)
+    pred = pred.astype(jnp.float32) * mask
+    truth = truth.astype(jnp.float32) * mask
+    tp = (pred * truth).sum()
+    fp = (pred * (1 - truth) * mask).sum()
+    fn = ((1 - pred) * mask * truth).sum()
+    return tp / jnp.maximum(tp + 0.5 * (fp + fn), _EPS)
+
+
+def pareto_nll(times: jax.Array, alpha: jax.Array, beta: jax.Array,
+               mask: jax.Array | None = None) -> jax.Array:
+    """Negative log-likelihood (Eq. 2, negated, masked mean).
+
+    Used as an alternative (differentiable in alpha) training target and in
+    property tests: MLE from ``fit_pareto`` must minimize this.
+    """
+    times = jnp.asarray(times, jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(times)
+    mask = mask.astype(jnp.float32)
+    q = jnp.maximum(mask.sum(-1), 1.0)
+    logs = jnp.where(mask > 0, jnp.log(jnp.maximum(times, _EPS)), 0.0).sum(-1)
+    ll = q * jnp.log(alpha) + q * alpha * jnp.log(beta) - (alpha + 1.0) * logs
+    return -(ll / q)

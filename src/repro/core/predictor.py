@@ -1,0 +1,97 @@
+"""Straggler Prediction module (paper Fig. 1 / Fig. 4): Encoder-LSTM -> Pareto.
+
+Ties together feature extraction, the Encoder-LSTM network and the Pareto
+expected-straggler computation, and owns network training (MSE against
+MLE-fitted (alpha, beta) targets — paper §4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoder_lstm as net
+from repro.core import features, pareto
+
+
+class Prediction(NamedTuple):
+    alpha: jax.Array      # (...,)
+    beta: jax.Array       # (...,)
+    threshold: jax.Array  # K  (...,)
+    e_s: jax.Array        # expected straggler count (...,)
+
+
+@dataclasses.dataclass
+class StragglerPredictor:
+    """Owns Encoder-LSTM params + the (I, T, k) hyper-parameters.
+
+    ``horizon`` is T/I — the number of LSTM iterations per prediction
+    (paper: I = 1 s, T = 5 s -> 5 steps).
+    """
+
+    n_hosts: int
+    max_tasks: int
+    k: float = pareto.DEFAULT_K
+    horizon: int = 5
+    interval: float = 1.0
+    seed: int = 0
+    # beta (the Pareto scale, in seconds) is regressed in units of
+    # beta_scale so the MSE loss is O(1); alpha is O(1) already
+    beta_scale: float = 1.0
+
+    def __post_init__(self):
+        self.input_dim = features.input_dim(self.n_hosts, self.max_tasks)
+        self.params = net.init_params(jax.random.PRNGKey(self.seed),
+                                      self.input_dim)
+        self.opt = net.adam_init(self.params)
+        self._losses: list[float] = []
+
+    # ---------------------------- inference -------------------------------
+
+    def predict(self, m_h_seq: jax.Array, m_t_seq: jax.Array,
+                q: jax.Array) -> Prediction:
+        """Predict (alpha, beta, K, E_S) for a batch of jobs.
+
+        Args:
+            m_h_seq: (T, n_hosts, HOST_FEATURES) shared host history.
+            m_t_seq: (T, jobs, max_tasks, TASK_FEATURES) per-job task history.
+            q: (jobs,) true task counts.
+        """
+        t = m_t_seq.shape[0]
+        jobs = m_t_seq.shape[1]
+        mh = jnp.broadcast_to(m_h_seq[:, None], (t, jobs, *m_h_seq.shape[1:]))
+        xs = features.flatten_inputs(mh, m_t_seq)  # (T, jobs, input_dim)
+        ab = net.predict_sequence(self.params, xs)  # (jobs, 2)
+        alpha, beta = ab[..., 0], ab[..., 1] * self.beta_scale
+        thr = pareto.straggler_threshold(alpha, beta, self.k)
+        e_s = pareto.expected_stragglers(q, alpha, beta, self.k)
+        return Prediction(alpha=alpha, beta=beta, threshold=thr, e_s=e_s)
+
+    # ---------------------------- training --------------------------------
+
+    def make_targets(self, times: jax.Array, mask: jax.Array | None = None
+                     ) -> jax.Array:
+        """MLE-fit (alpha, beta/beta_scale) targets from response times."""
+        a, b = pareto.fit_pareto(times, mask)
+        return jnp.stack([a, b / self.beta_scale], axis=-1)
+
+    def fit(self, xs: jax.Array, targets: jax.Array, epochs: int = 50,
+            lr: float = 1e-5, batch: int = 64) -> list[float]:
+        """Train on (T, N, input_dim) sequences vs (N, 2) targets."""
+        n = xs.shape[1]
+        rng = np.random.default_rng(self.seed)
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for s in range(0, n, batch):
+                idx = order[s:s + batch]
+                self.params, self.opt, loss = net.train_step(
+                    self.params, self.opt, xs[:, idx], targets[idx], lr=lr)
+            self._losses.append(float(loss))
+        return self._losses
+
+    @property
+    def losses(self) -> list[float]:
+        return self._losses

@@ -1,0 +1,110 @@
+"""START controller — Algorithm 1 of the paper, runtime-agnostic.
+
+Consumes per-interval telemetry (host matrix M_H + per-job task matrices
+M_T), predicts per-job expected straggler counts E_S via the Encoder-LSTM ->
+Pareto pipeline, and emits mitigation actions once a job has only floor(E_S)
+tasks left ("run job till completion of q - floor(E_S) tasks", line 12).
+
+Used by both the CloudSim-analogue simulator (repro.sim) and the distributed
+training runtime (repro.distributed.straggler_runtime).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mitigation
+from repro.core.predictor import StragglerPredictor
+
+
+@dataclasses.dataclass
+class JobView:
+    """Runtime-agnostic snapshot of one in-flight job."""
+
+    job_id: int
+    q: int                          # total tasks
+    deadline_oriented: bool
+    incomplete_task_ids: list[int]  # tasks still running
+    task_hosts: list[int]           # host of each incomplete task
+    task_matrix: np.ndarray         # (max_tasks, TASK_FEATURES)
+
+
+class STARTController:
+    def __init__(self, n_hosts: int, max_tasks: int, k: float = 1.5,
+                 horizon: int = 5, seed: int = 0,
+                 ma_decay: float = 0.8, beta_scale: float = 1.0):
+        self.predictor = StragglerPredictor(
+            n_hosts=n_hosts, max_tasks=max_tasks, k=k, horizon=horizon,
+            seed=seed, beta_scale=beta_scale)
+        self.ma = mitigation.StragglerMovingAverage(n_hosts, decay=ma_decay)
+        self.horizon = horizon
+        self._host_hist: collections.deque = collections.deque(
+            maxlen=horizon)
+        self._mitigated: set[int] = set()
+        self._es_cache: dict[int, float] = {}
+
+    # ------------------------------ telemetry -----------------------------
+
+    def observe_hosts(self, m_h: np.ndarray) -> None:
+        self._host_hist.append(np.asarray(m_h, np.float32))
+
+    def observe_straggler_counts(self, counts: np.ndarray) -> None:
+        self.ma.update(counts)
+
+    def job_finished(self, job_id: int) -> None:
+        self._mitigated.discard(job_id)
+        self._es_cache.pop(job_id, None)
+
+    def _host_seq(self) -> np.ndarray:
+        hist = list(self._host_hist)
+        while len(hist) < self.horizon:  # left-pad with oldest snapshot
+            hist.insert(0, hist[0])
+        return np.stack(hist[-self.horizon:])
+
+    # ------------------------------ decision ------------------------------
+
+    def predict_es(self, jobs: Sequence[JobView]) -> np.ndarray:
+        """Batched PredictStraggler (Alg. 1 lines 6-13) over current jobs."""
+        if not jobs or not self._host_hist:
+            return np.zeros(len(jobs))
+        m_h_seq = jnp.asarray(self._host_seq())
+        m_t = np.stack([j.task_matrix for j in jobs])  # (jobs, q', p)
+        # pad the job batch to a power of two so jit compiles once per bucket
+        n = len(jobs)
+        pad = max(1 << (n - 1).bit_length(), 1) - n if n else 0
+        if pad:
+            m_t = np.concatenate([m_t, np.zeros((pad, *m_t.shape[1:]),
+                                                m_t.dtype)])
+        m_t_seq = jnp.broadcast_to(
+            jnp.asarray(m_t)[None], (self.horizon, *m_t.shape))
+        q = jnp.asarray([j.q for j in jobs] + [1.0] * pad, jnp.float32)
+        pred = self.predictor.predict(m_h_seq, m_t_seq, q)
+        e_s = np.asarray(pred.e_s)[:n]
+        for j, e in zip(jobs, e_s):
+            self._es_cache[j.job_id] = float(e)
+        return e_s
+
+    def decide(self, jobs: Sequence[JobView],
+               host_load: np.ndarray | None = None
+               ) -> list[mitigation.Action]:
+        """Algorithm 1 main loop: emit mitigation actions for jobs that have
+        reached the q - floor(E_S) completion point."""
+        if not jobs:
+            return []
+        e_s = self.predict_es(jobs)
+        actions: list[mitigation.Action] = []
+        for job, es in zip(jobs, e_s):
+            n_mit = int(np.floor(es))
+            if n_mit <= 0 or job.job_id in self._mitigated:
+                continue  # normal job (J_n) or already handled
+            if len(job.incomplete_task_ids) <= n_mit:
+                # only the expected stragglers remain -> mitigate them now
+                actions.extend(mitigation.plan_mitigation(
+                    job.job_id, job.incomplete_task_ids, job.task_hosts,
+                    job.deadline_oriented, self.ma, load=host_load))
+                self._mitigated.add(job.job_id)
+        return actions

@@ -1,0 +1,8 @@
+from repro.distributed import compression, elastic, sharding
+from repro.distributed.straggler_runtime import (ActionKind, HostAction,
+                                                 RuntimeConfig,
+                                                 StragglerRuntime,
+                                                 backup_mask)
+
+__all__ = ["compression", "elastic", "sharding", "StragglerRuntime",
+           "RuntimeConfig", "HostAction", "ActionKind", "backup_mask"]

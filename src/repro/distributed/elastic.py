@@ -1,0 +1,65 @@
+"""Elastic scaling: rebuild the mesh after host loss and reshard state.
+
+Protocol (DESIGN.md §3 — the 're-run' mitigation mapped to pods):
+  1. a host is declared failed (hardware fault or START chronic-straggler
+     eviction);
+  2. survivors agree on a new device set (here: the local simulation drops
+     the host's devices);
+  3. a new mesh is built with the largest (data', model) grid that fits;
+  4. params/opt state are restored from the latest checkpoint with the new
+     mesh's shardings (repro.train.checkpoint.restore does the re-shard);
+  5. the data pipeline re-derives shard assignments from the new topology
+     (SyntheticLM is stateless per (seed, step, shard) so this is free).
+
+Everything here is exercised on fake CPU devices in tests/test_distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: Any
+    generation: int = 0
+    failed_devices: tuple = ()
+
+
+def largest_grid(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) grid with the required model parallelism."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need >= {model_parallel} devices, have {n_devices}")
+    return n_devices // model_parallel, model_parallel
+
+
+def remesh(state: ElasticState, lost: Sequence[int],
+           model_parallel: int | None = None) -> ElasticState:
+    """Drop ``lost`` device ids and build the next-generation mesh."""
+    old_devices = state.mesh.devices.flatten()
+    keep = [d for d in old_devices if d.id not in set(lost)]
+    mp = model_parallel or state.mesh.shape.get("model", 1)
+    n_data, n_model = largest_grid(len(keep), mp)
+    usable = keep[:n_data * n_model]
+    arr = np.array(usable).reshape(n_data, n_model)
+    mesh = Mesh(arr, ("data", "model"))
+    return ElasticState(mesh=mesh, generation=state.generation + 1,
+                        failed_devices=state.failed_devices + tuple(lost))
+
+
+def reshard(tree: Any, old_mesh, new_mesh, spec_fn) -> Any:
+    """Move a pytree onto a new mesh: device_get -> device_put with the
+    new mesh's shardings (checkpoint-free path for small state; large
+    state goes through repro.train.checkpoint.restore)."""
+    from jax.sharding import NamedSharding
+    host = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
+                                  tree)
+    specs = spec_fn(host, new_mesh)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        host, specs)

@@ -1,0 +1,203 @@
+"""Sharding rules: param-tree paths -> PartitionSpec on the production mesh.
+
+Layout (DESIGN.md §7):
+  * TP over "model": attention head projections, FFN hidden, vocab head,
+    MoE experts (EP), mamba inner channels.
+  * FSDP (ZeRO-3) over "data": every large matrix additionally sharded on a
+    non-TP dimension when divisible.
+  * "pod" stays pure data-parallel (batch) so cross-pod traffic is a single
+    gradient reduce — the cheapest thing to send over DCI.
+
+Specs are right-aligned: rules name the trailing dims; leading layer-stack
+dims are padded with None. The FSDP axis is applied opportunistically (only
+where the dim divides evenly) — embed tables with odd vocab sizes simply
+stay replicated along that axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+# rules: leaf-name -> (tp_dim_from_right, fsdp_dim_from_right) or None
+# dims are negative indices into the array shape (right-aligned)
+_RULES: dict[str, tuple[int | None, int | None]] = {
+    # attention
+    "wq": (-1, -2), "wk": (-1, -2), "wv": (-1, -2), "wo": (-2, -1),
+    # MLA
+    "wq_a": (-1, -2), "wq_b": (-1, -2), "wkv_a": (None, -2),
+    "wkv_b": (-1, -2),
+    # mlp
+    "wg": (-1, -2), "wu": (-1, -2), "wd": (-2, -1),
+    # embedding / head
+    "embed": (-1, -2), "head": (-1, -2),
+    # mamba
+    "in_proj": (-1, -2), "conv_w": (-1, None), "conv_b": (-1, None),
+    "x_proj": (-2, -1), "dt_proj": (-1, -2), "dt_bias": (-1, None),
+    "a_log": (-2, None), "skip": (-1, None),
+    "out_proj": (-2, -1),
+    # router: replicated
+    "router": (None, None),
+}
+
+# MoE expert tensors: expert dim is third-from-right -> EP over model
+_EXPERT_LEAVES = {"wg", "wu", "wd"}
+
+
+def _spec_for(path_names: list[str], shape: tuple, mesh,
+              fsdp: bool = True, tp: bool = True,
+              fsdp_axes: tuple | None = None) -> P:
+    name = path_names[-1]
+    nd = len(shape)
+    axes: list = [None] * nd
+    n_model = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                           if a == MODEL_AXIS])) if tp else 1
+    fsdp_axes = fsdp_axes or (DATA_AXIS,)
+    n_data = int(np.prod([mesh.shape[a] for a in fsdp_axes]))
+    fsdp_spec = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    is_expert = name in _EXPERT_LEAVES and ("moe" in path_names
+                                            or "shared" not in path_names
+                                            and nd >= 3 and name in
+                                            _EXPERT_LEAVES and
+                                            "mlp" not in path_names)
+    # MoE expert weights: detect by an enclosing "moe" key
+    if name in _EXPERT_LEAVES and "moe" in path_names \
+            and "shared" not in path_names:
+        # (..., E, d, f) or (..., E, f, d): EP on E; FSDP on d if divisible
+        e_dim = nd - 3
+        axes[e_dim] = MODEL_AXIS
+        d_dim = nd - 2 if name in ("wg", "wu") else nd - 1
+        if fsdp and shape[d_dim] % n_data == 0:
+            axes[d_dim] = fsdp_spec
+        return P(*axes)
+    del is_expert
+    rule = _RULES.get(name)
+    if rule is None:
+        return P()  # norms, biases, scalars: replicated
+    tdim, fdim = rule
+    if tp and tdim is not None and shape[nd + tdim] % n_model == 0:
+        axes[nd + tdim] = MODEL_AXIS
+    if fsdp and fdim is not None and nd + fdim >= 0 \
+            and shape[nd + fdim] % n_data == 0 \
+            and axes[nd + fdim] is None:
+        axes[nd + fdim] = fsdp_spec
+    return P(*axes)
+
+
+def param_specs(params: Any, mesh, fsdp: bool = True, tp: bool = True,
+                fsdp_axes: tuple | None = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs
+    or concrete arrays).
+
+    Layouts (EXPERIMENTS.md §Perf iterations 1-2):
+      tp=True,  fsdp=True   ZeRO-3 + TP (default; big MoE)
+      tp=True,  fsdp=False  pure TP (state fits n_model shards)
+      tp=False, fsdp=True, fsdp_axes=("data","model")
+                            pure ZeRO-3 over the whole pod — no TP
+                            activation all-reduces at all; best for dense
+                            archs whose sharded state fits (the model axis
+                            carries FSDP+batch instead of tensor splits)."""
+
+    def f(path, leaf):
+        return _spec_for(_path_names(path), leaf.shape, mesh, fsdp=fsdp,
+                         tp=tp, fsdp_axes=fsdp_axes)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(params: Any, mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def dp_axes(mesh) -> tuple:
+    """Batch-sharding axes: ('pod', 'data') when the pod axis exists."""
+    return tuple(a for a in ("pod", DATA_AXIS) if a in mesh.axis_names)
+
+
+def _dp_if_divisible(dim: int, mesh) -> Any:
+    """dp axes (possibly a prefix of them) that evenly divide ``dim``."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if dim % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def batch_specs_tree(batch: Any, mesh) -> Any:
+    """Shard the leading (batch) dim of every batch leaf over dp axes
+    (skipping axes that don't divide — e.g. global_batch=1 decode)."""
+
+    def f(leaf):
+        return P(_dp_if_divisible(leaf.shape[0], mesh),
+                 *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(f, batch)
+
+
+def cache_specs_tree(caches: Any, mesh, seq_axis_sharding: bool = True
+                     ) -> Any:
+    """KV-cache sharding for serving.
+
+    Default: batch over dp axes and *sequence* over the model axis
+    (sequence-parallel flash-decode: XLA turns the softmax/contraction
+    reductions into small all-reduces — the right layout when n_kv_heads <
+    model-axis size, which holds for most assigned archs). Mamba recurrent
+    state h (L, B, Di, N) shards Di over model.
+    """
+    n_model = mesh.shape.get(MODEL_AXIS, 1)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = len(leaf.shape)
+        axes: list = [None] * nd
+        if name in ("k", "v"):            # (L, B, Hkv, S, hd)
+            axes[nd - 4] = _dp_if_divisible(leaf.shape[nd - 4], mesh)
+            if seq_axis_sharding and leaf.shape[nd - 2] % n_model == 0:
+                axes[nd - 2] = MODEL_AXIS
+            elif leaf.shape[nd - 3] % n_model == 0:
+                axes[nd - 3] = MODEL_AXIS  # fall back to kv-head sharding
+            return P(*axes)
+        if name in ("c_kv", "k_rope"):    # (L, B, S, d) MLA latents
+            axes[nd - 3] = _dp_if_divisible(leaf.shape[nd - 3], mesh)
+            if seq_axis_sharding and leaf.shape[nd - 2] % n_model == 0:
+                axes[nd - 2] = MODEL_AXIS
+            return P(*axes)
+        if name == "h":                   # (L, B, Di, N) mamba state
+            axes[nd - 3] = _dp_if_divisible(leaf.shape[nd - 3], mesh)
+            if leaf.shape[nd - 2] % n_model == 0:
+                axes[nd - 2] = MODEL_AXIS
+            return P(*axes)
+        if name == "conv":                # (L, B, K-1, Di)
+            axes[nd - 3] = _dp_if_divisible(leaf.shape[nd - 3], mesh)
+            if leaf.shape[nd - 1] % n_model == 0:
+                axes[nd - 1] = MODEL_AXIS
+            return P(*axes)
+        if name == "enc":                 # (B, S_enc, d) encoder states
+            axes[0] = _dp_if_divisible(leaf.shape[0], mesh)
+            return P(*axes)
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(f, caches)

@@ -1,0 +1,164 @@
+"""START applied to distributed training pods (the beyond-paper layer).
+
+In synchronous SPMD training every collective waits for the slowest host,
+so one straggler host taxes the whole step. Prior systems detect this
+reactively (timeout, then restart); START's insight — predict the latency
+*tail* from host+work features with an Encoder-LSTM over a Pareto model —
+transfers directly:
+
+  M_H  <- per-host telemetry (step time, mem/net utilization, restart count)
+  M_T  <- per-shard work descriptors (microbatches, token counts)
+  E_S  <- expected number of straggler hosts this interval (Eq. 4)
+
+Mitigation (Algorithm 1 mapped to pod semantics — DESIGN.md §6):
+  * SPECULATE -> backup shards: the lowest-MA healthy host also computes
+    the predicted straggler's microbatch; at the gradient reduce a
+    first-done-wins mask keeps exactly one contribution (gradient-exact).
+  * RERUN -> evict-and-remesh: chronic stragglers are dropped at a step
+    boundary; repro.distributed.elastic rebuilds the mesh and state is
+    restored from the latest checkpoint.
+
+This module is runtime-agnostic: it consumes step-time observations (real
+timers on hardware; simulated Pareto latencies in tests/examples) and
+emits actions. The decision core is the same STARTController the cloud
+simulator uses — one model, two substrates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+from repro.core import features, pareto
+from repro.core.predictor import StragglerPredictor
+
+
+class ActionKind(enum.Enum):
+    BACKUP_SHARD = "backup_shard"   # speculation analogue
+    EVICT = "evict"                 # re-run analogue (remesh without host)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostAction:
+    kind: ActionKind
+    host: int
+    backup: int | None = None       # host that also computes the shard
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    n_hosts: int
+    horizon: int = 5
+    k: float = 1.5
+    evict_after: int = 3        # consecutive straggler intervals -> evict
+    ma_decay: float = 0.8
+    seed: int = 0
+
+
+class StragglerRuntime:
+    """Per-step telemetry in, mitigation actions out."""
+
+    def __init__(self, cfg: RuntimeConfig):
+        self.cfg = cfg
+        self.predictor = StragglerPredictor(
+            n_hosts=cfg.n_hosts, max_tasks=cfg.n_hosts, k=cfg.k,
+            horizon=cfg.horizon, seed=cfg.seed)
+        self.hist: list[np.ndarray] = []      # per-interval host features
+        self.step_times: list[np.ndarray] = []
+        self.chronic = np.zeros(cfg.n_hosts, np.int64)
+        self.ma = np.zeros(cfg.n_hosts)
+        self.evicted: set[int] = set()
+
+    # ------------------------------ telemetry ------------------------------
+
+    def observe_step(self, step_times_s: np.ndarray,
+                     mem_util: np.ndarray | None = None,
+                     net_util: np.ndarray | None = None) -> None:
+        n = self.cfg.n_hosts
+        st = np.asarray(step_times_s, float)
+        self.step_times.append(st)
+        med = np.median(st[st > 0]) if (st > 0).any() else 1.0
+        rel = st / max(med, 1e-9)
+        mem = mem_util if mem_util is not None else np.zeros(n)
+        net = net_util if net_util is not None else np.zeros(n)
+        m_h = np.asarray(features.host_matrix(
+            util=np.stack([np.clip(rel - 1, 0, 2), mem, net,
+                           np.zeros(n)], 1),
+            cap=np.ones((n, 4)), cost=np.ones(n), power_max=np.ones(n),
+            n_tasks=np.ones(n)))
+        self.hist.append(m_h)
+        self.ma = self.cfg.ma_decay * self.ma \
+            + (1 - self.cfg.ma_decay) * (rel > self.cfg.k)
+        self.chronic = np.where(rel > self.cfg.k, self.chronic + 1, 0)
+
+    # ------------------------------ decision -------------------------------
+
+    def fitted_tail(self) -> tuple[float, float]:
+        """MLE Pareto fit over the recent per-host step times."""
+        recent = np.concatenate(self.step_times[-self.cfg.horizon:])
+        recent = recent[recent > 0]
+        a, b = pareto.fit_pareto(np.asarray(recent, np.float32))
+        return float(a), float(b)
+
+    def expected_stragglers(self) -> float:
+        """E_S from the *predicted* tail (Encoder-LSTM when trained, MLE
+        fallback before training — same Pareto math either way)."""
+        if not self.step_times:
+            return 0.0
+        a, b = self.fitted_tail()
+        return float(pareto.expected_stragglers(
+            float(self.cfg.n_hosts), a, b, self.cfg.k))
+
+    def decide(self) -> list[HostAction]:
+        """Algorithm 1 per training interval.
+
+        Chronic stragglers are evicted unconditionally (a host that is slow
+        ``evict_after`` intervals in a row delays every step regardless of
+        the tail estimate); E_S sizes the *speculative* backup set, exactly
+        as floor(E_S) sizes the mitigation set in the paper."""
+        if not self.step_times:
+            return []
+        actions: list[HostAction] = []
+        for h in np.nonzero(self.chronic >= self.cfg.evict_after)[0]:
+            h = int(h)
+            if h not in self.evicted:
+                actions.append(HostAction(ActionKind.EVICT, h))
+                self.evicted.add(h)
+        e_s = self.expected_stragglers()
+        n_mit = int(np.floor(e_s))
+        if n_mit <= 0:
+            return actions
+        last = self.step_times[-1]
+        order = np.argsort(-last)  # slowest first
+        healthy = [int(h) for h in np.argsort(self.ma)
+                   if h not in self.evicted]
+        hi = 0
+        acted = {a.host for a in actions}
+        for h in order[:n_mit]:
+            h = int(h)
+            if h in self.evicted or h in acted:
+                continue
+            while hi < len(healthy) and healthy[hi] == h:
+                hi += 1
+            backup = healthy[hi % len(healthy)] if healthy else h
+            hi += 1
+            actions.append(HostAction(ActionKind.BACKUP_SHARD, h,
+                                      backup=backup))
+        return actions
+
+
+def backup_mask(n_hosts: int, actions: list[HostAction],
+                finished_in_time: np.ndarray) -> np.ndarray:
+    """First-done-wins combine weights for the gradient reduce.
+
+    finished_in_time[h] — did host h's primary shard meet the deadline.
+    Returns (n_hosts,) weights: owner 1.0 if on time, else its backup 1.0;
+    exactly one contribution per shard so the gradient stays exact.
+    """
+    w = np.asarray(finished_in_time, float).copy()
+    for a in actions:
+        if a.kind is ActionKind.BACKUP_SHARD and a.backup is not None:
+            if not finished_in_time[a.host]:
+                w[a.host] = 0.0  # backup host contributes this shard
+    return w

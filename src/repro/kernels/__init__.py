@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel subpackage ships: <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp oracle used by the
+per-kernel sweep tests and as the XLA path on non-TPU backends).
+"""

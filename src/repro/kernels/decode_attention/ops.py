@@ -1,0 +1,32 @@
+"""jit'd wrapper for decode attention (padding + backend dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, kv_len=None, sm_scale=None, block_k=512,
+                     interpret=True):
+    """Public API: q (B, H, D); k, v (B, Hkv, S, D). Pads S to block_k."""
+    sk = k.shape[2]
+    bk = min(block_k, max(128, 1 << (sk - 1).bit_length()))
+    pad = (-sk) % bk
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    return decode_attention_pallas(
+        q, k, v, sm_scale=sm_scale, block_k=bk,
+        kv_len=kv_len if kv_len is not None else sk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale",))
+def decode_attention_xla(q, k, v, sm_scale=None):
+    """XLA (oracle) path used on non-TPU backends and in the dry-run."""
+    return decode_attention_ref(q, k, v, sm_scale=sm_scale)

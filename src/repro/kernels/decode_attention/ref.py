@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for single-token decode attention.
+
+Grouped-GQA einsum (no jnp.repeat): K/V keep their sharding (seq-parallel
+flash-decode under GSPMD — the contractions over the sharded seq axis
+become partial sums + a small (B, Hkv, G[, D]) all-reduce instead of a
+full cache all-gather). See EXPERIMENTS.md §Perf iteration 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         sm_scale: float | None = None,
+                         kv_len: int | None = None) -> jax.Array:
+    """q: (B, H, Dq); k: (B, Hkv, S, Dq); v: (B, Hkv, S, Dv) -> (B, H, Dv).
+
+    Dq may differ from Dv (MLA latent decode uses 576-d keys, 512-d
+    values)."""
+    b, h, dq = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    sm_scale = sm_scale if sm_scale is not None else dq ** -0.5
+    kv_len = kv_len if kv_len is not None else sk
+    qg = q.reshape(b, hkv, g, dq)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    mask = jnp.arange(sk)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    s = s - jax.lax.stop_gradient(s.max(-1, keepdims=True))
+    p = jnp.exp(s)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, -1).astype(q.dtype)

@@ -1,0 +1,71 @@
+"""jit'd public wrapper for flash attention.
+
+Handles padding to block multiples, dtype plumbing, the CPU/TPU dispatch
+(Pallas kernels lower only on TPU; on CPU the oracle runs under jit and XLA
+fuses it), and a custom VJP so the kernel is differentiable (backward uses
+the oracle's VJP with recomputation — a dedicated backward kernel is listed
+as future work in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, sm_scale=None, block_q=128,
+                    block_k=128, interpret=True):
+    """Public API. q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D)."""
+    return _fwd_impl(q, k, v, causal, sm_scale, block_q, block_k, interpret)
+
+
+def _fwd_impl(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    sq, sk = q.shape[2], k.shape[2]
+    bq = min(block_q, max(8, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (sk - 1).bit_length()))
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, sm_scale=sm_scale, block_q=bq,
+        block_k=bk, kv_len=sk, interpret=interpret)
+    return out[:, :, :sq]
+
+
+def _fwd(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    return _fwd_impl(q, k, v, causal, sm_scale, block_q, block_k,
+                     interpret), (q, k, v)
+
+
+def _bwd(causal, sm_scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         sm_scale=sm_scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale"))
+def attention_xla(q, k, v, causal=True, sm_scale=None):
+    """XLA (oracle) path used on non-TPU backends and in the dry-run."""
+    return attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)

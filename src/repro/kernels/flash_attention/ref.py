@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + padded-key masking).
+
+Distribution-friendly formulation: GQA is a grouped einsum on the
+(B, Hkv, G, ...) view of q — K/V are never materialized at H heads.
+(jnp.repeat(k, group) forced GSPMD to reshard seq-sharded KV to
+head-sharded, fully replicating the tensor: +2.1 GiB/layer collectives in
+decode, see EXPERIMENTS.md §Perf iteration 2.)
+
+``chunk_q``: queries are processed in blocks via lax.map so live score
+memory is O(chunk x S) instead of O(S^2) — exact same math (each row
+still sees its full softmax), 32x less temp memory at 32k prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attn_block(q: jax.Array, k: jax.Array, v: jax.Array, q_off,
+                sm_scale: float, causal: bool, kv_len) -> jax.Array:
+    """q: (B, Hkv, G, Sq, D); k, v: (B, Hkv, Sk, D). q_off: scalar offset
+    of this query block for causal masking."""
+    sq = q.shape[3]
+    sk = k.shape[2]
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    kpos = jnp.arange(sk)
+    mask = (kpos < kv_len)[None, :]
+    if causal:
+        qpos = q_off + jnp.arange(sq)
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    s = s - jax.lax.stop_gradient(s.max(-1, keepdims=True))
+    p = jnp.exp(s)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, sm_scale: float | None = None,
+                  kv_len: int | None = None,
+                  chunk_q: int | None = 2048) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D). fp32 softmax, output q.dtype."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kv_len = kv_len if kv_len is not None else sk
+    qg = q.reshape(b, hkv, g, sq, d)
+    if chunk_q is None or sq <= chunk_q or sq % chunk_q != 0:
+        out = _attn_block(qg, k, v, 0, sm_scale, causal, kv_len)
+    else:
+        n = sq // chunk_q
+        qc = jnp.moveaxis(
+            qg.reshape(b, hkv, g, n, chunk_q, d), 3, 0)  # (n, b,hkv,g,c,d)
+        offs = jnp.arange(n) * chunk_q
+        fn = functools.partial(_attn_block, k=k, v=v, sm_scale=sm_scale,
+                               causal=causal, kv_len=kv_len)
+        # remat each chunk: without it lax.map's backward stacks every
+        # chunk's (.., chunk, S) score matrix — the full S^2 again
+        # (EXPERIMENTS.md §Perf iteration 4)
+        body = jax.checkpoint(lambda args: fn(args[0], q_off=args[1]))
+        out = jax.lax.map(body, (qc, offs))
+        out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, sq, -1)
+    # v's head dim may differ from q's (MLA trains with dv != dq)
+    return out.reshape(b, h, sq, -1).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the fused LSTM cell (batch padding + dispatch)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lstm_cell.lstm_cell import lstm_cell_pallas
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+
+def lstm_cell(x, h, c, wx, wh, b, block_b=128, interpret=True):
+    """Public API; pads batch to the block size and unpads outputs."""
+    bsz = x.shape[0]
+    bb = min(block_b, max(8, 1 << (bsz - 1).bit_length()))
+    pad = (-bsz) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    h2, c2 = lstm_cell_pallas(x, h, c, wx, wh, b, block_b=bb,
+                              interpret=interpret)
+    return h2[:bsz], c2[:bsz]
+
+
+__all__ = ["lstm_cell", "lstm_cell_ref"]

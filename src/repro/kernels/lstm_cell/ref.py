@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused LSTM cell: must match
+repro.core.encoder_lstm.lstm_cell_apply exactly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    z = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,4 @@
+from repro.kernels.mamba_scan.ops import mamba_scan, mamba_scan_xla
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+__all__ = ["mamba_scan", "mamba_scan_ref", "mamba_scan_xla"]

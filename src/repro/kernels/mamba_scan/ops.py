@@ -1,0 +1,55 @@
+"""jit'd wrapper for the selective scan (padding + backend dispatch +
+custom VJP via the oracle's recomputed backward)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def mamba_scan(u, delta, a, b, c, skip, block_d=128, chunk=64,
+               interpret=True):
+    """Public API. u, delta: (B, L, D); a: (D, N); b, c: (B, L, N)."""
+    return _impl(u, delta, a, b, c, skip, block_d, chunk, interpret)
+
+
+def _impl(u, delta, a, b, c, skip, block_d, chunk, interpret):
+    bsz, ell, d = u.shape
+    bd = min(block_d, max(8, 1 << (d - 1).bit_length()))
+    cl = min(chunk, max(8, 1 << (ell - 1).bit_length()))
+    pad_d = (-d) % bd
+    pad_l = (-ell) % cl
+    if pad_d or pad_l:
+        u = jnp.pad(u, ((0, 0), (0, pad_l), (0, pad_d)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad_l), (0, pad_d)))
+        a = jnp.pad(a, ((0, pad_d), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad_l), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_l), (0, 0)))
+        skip = jnp.pad(skip, (0, pad_d))
+    out = mamba_scan_pallas(u, delta, a, b, c, skip, block_d=bd, chunk=cl,
+                            interpret=interpret)
+    return out[:, :ell, :d]
+
+
+def _fwd(u, delta, a, b, c, skip, block_d, chunk, interpret):
+    return _impl(u, delta, a, b, c, skip, block_d, chunk, interpret), \
+        (u, delta, a, b, c, skip)
+
+
+def _bwd(block_d, chunk, interpret, res, g):
+    _, vjp = jax.vjp(mamba_scan_ref, *res)
+    return vjp(g)
+
+
+mamba_scan.defvjp(_fwd, _bwd)
+
+
+@jax.jit
+def mamba_scan_xla(u, delta, a, b, c, skip):
+    """XLA (oracle) path used on non-TPU backends and in the dry-run."""
+    return mamba_scan_ref(u, delta, a, b, c, skip)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(u: jax.Array, delta: jax.Array, a: jax.Array,
+                   b: jax.Array, c: jax.Array, skip: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """u, delta: (B, L, D); a: (D, N); b, c: (B, L, N); skip: (D,)."""
+    bsz, ell, d = u.shape
+    n = a.shape[1]
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs          # (B,D) (B,D) (B,N) (B,N)
+        decay = jnp.exp(dt_t[..., None] * af[None])      # (B, D, N)
+        h = decay * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + skip[None] * u_t
+        return h, y
+
+    h = jnp.zeros((bsz, d, n), jnp.float32) if h0 is None else h0
+    _, ys = jax.lax.scan(
+        step, h,
+        (uf.transpose(1, 0, 2), df.transpose(1, 0, 2),
+         bf.transpose(1, 0, 2), cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(u.dtype)

@@ -1,0 +1,27 @@
+"""jit'd wrapper for the MoE router (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_router.moe_router import moe_router_pallas
+from repro.kernels.moe_router.ref import moe_router_ref
+
+
+def moe_router(logits, k, block_t=256, interpret=True):
+    """Public API; pads token count to the block size."""
+    t = logits.shape[0]
+    bt = min(block_t, max(8, 1 << (t - 1).bit_length()))
+    pad = (-t) % bt
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    w, idx = moe_router_pallas(logits, k, block_t=bt, interpret=interpret)
+    return w[:t], idx[:t]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def moe_router_xla(logits, k):
+    """XLA (oracle) path used on non-TPU backends and in the dry-run."""
+    return moe_router_ref(logits, k)

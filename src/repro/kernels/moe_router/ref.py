@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the top-k softmax router."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_router_ref(logits: jax.Array, k: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """logits: (T, E) -> (weights (T, k) f32 renormalized, indices i32)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(p, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-20)
+    return w.astype(jnp.float32), idx.astype(jnp.int32)

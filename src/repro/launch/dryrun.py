@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+compiles and fits — on 512 placeholder CPU devices standing in for
+2 x v5e-256 pods.
+
+Per cell: build the model (EP shard_map when MoE), lower the right step
+(train_step / prefill / serve_step) with explicit in/out shardings,
+compile, and record memory_analysis + cost_analysis + the collective
+bytes parsed from the optimized per-device HLO into a JSON artifact that
+benchmarks/roofline.py turns into EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import SHAPES, applicable
+from repro.distributed import sharding as Sh
+from repro.launch import hlo_accounting
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import EPSetup, Model, ShardCtx
+from repro.models.specs import batch_specs, input_specs, params_specs
+from repro.train import optimizer as Opt
+from repro.train.trainer import TrainConfig, auto_n_micro, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
+                       r"u64)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (per-device)
+    optimized HLO. Returns {op_name: bytes, 'total': ...}."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        for op in COLLECTIVE_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split("=", 1)[0]
+                for m in _SHAPE_RE.finditer(line.split("(", 1)[0]):
+                    dt, dims = m.group(1), m.group(2)
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    out[op] += n * _DTYPE_BYTES[dt]
+                del lhs
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def _mesh_dp(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+
+
+def build_model(arch: str, mesh, dp_override: tuple | None
+                = None) -> Model:
+    cfg = get_config(arch)
+    ep = None
+    ctx = None
+    if mesh is not None:
+        dp = dp_override if dp_override is not None else Sh.dp_axes(mesh)
+        ctx = ShardCtx(mesh=mesh, dp_axes=dp)
+        if cfg.n_experts:
+            nm = mesh.shape.get("model", 1)
+            if cfg.n_experts % nm == 0 and nm > 1:
+                ep = EPSetup(mesh=mesh, dp_axes=Sh.dp_axes(mesh),
+                             ep_axis="model", n_shards=nm)
+    return Model(cfg, ep=ep, shard_ctx=ctx)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, opt_kind: str | None
+               = None, seq_shard_cache: bool = True, n_micro: int | None
+               = None):
+    """Lower one (arch, shape, mesh) cell; returns (lowered, meta)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ns = lambda spec: NamedSharding(mesh, spec)  # noqa: E731
+    nst = lambda tree: jax.tree_util.tree_map(  # noqa: E731
+        ns, tree, is_leaf=lambda x: isinstance(x, P))
+    meta = dict(arch=arch, shape=shape_name,
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count())
+
+    if shape.kind == "train":
+        n_params = cfg.param_count()
+        okind = opt_kind or ("adafactor" if n_params > 1.5e10
+                             else "adamw")
+        ocfg = Opt.OptConfig(kind=okind)
+        accum = "bfloat16" if n_params > 1e11 else "float32"
+        # bytes/param of live training state per model shard
+        bpp = {"adamw": 14.0, "adafactor": 8.5}[okind]
+        if accum == "bfloat16":
+            bpp -= 2.0
+        n_model = mesh.shape.get("model", 1)
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        # layout (EXPERIMENTS.md §Perf iteration 2): dense archs whose
+        # sharded state fits n_dev shards train as pure ZeRO-3 over the
+        # whole pod (no TP -> no per-layer activation all-reduces); MoE
+        # keeps TP/EP on the model axis.
+        # activation estimate at n_micro=1 (fsdp_all can't micro-split a
+        # 1-sample-per-device batch): remat carries + loss-head live set
+        tokens_dev = shape.global_batch * shape.seq_len / n_dev
+        logits_est = tokens_dev * cfg.padded_vocab * 2
+        act_est = ((cfg.n_layers + cfg.encoder_layers) * tokens_dev
+                   * cfg.d_model * 2 + logits_est)
+        # big-vocab archs keep the TP-sharded head: an unsharded
+        # (tokens, vocab) loss head dominates memory at n_micro=1
+        fsdp_all = (cfg.n_experts == 0
+                    and n_params * bpp / n_dev <= 12e9
+                    and act_est <= 2.7e9 and logits_est <= 1.2e9
+                    and shape.global_batch % n_dev == 0)
+        if fsdp_all:
+            dp = Sh.dp_axes(mesh) + ("model",)
+            model = build_model(arch, mesh, dp_override=dp)
+            params_sds = params_specs(model)
+            pspec = Sh.param_specs(params_sds, mesh, fsdp=True, tp=False,
+                                   fsdp_axes=("data", "model"))
+            fsdp = True
+            nm = n_micro or auto_n_micro(
+                shape.global_batch, shape.seq_len, cfg.padded_vocab,
+                n_dev, n_model=1,
+                n_layers=cfg.n_layers + cfg.encoder_layers,
+                d_model=cfg.d_model)
+        else:
+            dp = Sh.dp_axes(mesh)
+            model = build_model(arch, mesh)
+            params_sds = params_specs(model)
+            fsdp = n_params * bpp / n_model > 12e9  # ~12G of 16G HBM
+            pspec = Sh.param_specs(params_sds, mesh, fsdp=fsdp)
+            nm = n_micro or auto_n_micro(
+                shape.global_batch, shape.seq_len, cfg.padded_vocab,
+                _mesh_dp(mesh), n_model=n_model,
+                n_layers=cfg.n_layers + cfg.encoder_layers,
+                d_model=cfg.d_model)
+        tcfg = TrainConfig(n_micro=nm, accum_dtype=accum)
+        meta.update(optimizer=okind, n_micro=tcfg.n_micro, fsdp=fsdp,
+                    layout="fsdp_all" if fsdp_all else "tp")
+
+        def bsp(leaf):
+            first = dp if leaf.shape[0] % n_dev == 0 else None
+            return P(first, *([None] * (len(leaf.shape) - 1)))
+
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len, True)
+        bspec = jax.tree_util.tree_map(bsp, batch) if fsdp_all \
+            else Sh.batch_specs_tree(batch, mesh)
+        opt_sds = jax.eval_shape(
+            lambda: Opt.init(ocfg, params_sds))
+        ospec = Opt.opt_specs(ocfg, pspec, params_sds)
+        fn = make_train_step(model, ocfg, tcfg, mesh=mesh, dp_axes=dp,
+                             grad_specs=pspec)
+        lowered = jax.jit(
+            fn,
+            in_shardings=(nst(pspec), nst(ospec), nst(bspec)),
+            out_shardings=(nst(pspec), nst(ospec), None),
+            donate_argnums=(0, 1),
+        ).lower(params_sds, opt_sds, batch)
+        return lowered, meta
+
+    model = build_model(arch, mesh)
+    params_sds = params_specs(model)
+    if shape.kind == "prefill":
+        pspec = Sh.param_specs(
+            params_sds, mesh,
+            fsdp=cfg.param_count() * 2 / mesh.shape.get("model", 1)
+            > 12e9)
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len, False)
+        bspec = Sh.batch_specs_tree(batch, mesh)
+        lowered = jax.jit(
+            model.prefill,
+            in_shardings=(nst(pspec), nst(bspec)),
+        ).lower(params_sds, batch)
+        return lowered, meta
+
+    # decode (serve_step): one token against a seq_len cache
+    pspec = Sh.param_specs(
+        params_sds, mesh,
+        fsdp=cfg.param_count() * 2 / mesh.shape.get("model", 1) > 12e9)
+    specs = input_specs(model, shape)
+    cspec = Sh.cache_specs_tree(specs["caches"], mesh,
+                                seq_axis_sharding=seq_shard_cache)
+    tok_spec = P(Sh._dp_if_divisible(shape.global_batch, mesh), None)
+    lowered = jax.jit(
+        model.decode_step,
+        in_shardings=(nst(pspec), nst(cspec), ns(tok_spec), ns(P())),
+        out_shardings=(None, nst(cspec)),
+        donate_argnums=(1,),
+    ).lower(params_sds, specs["caches"], specs["tokens"],
+            specs["pos"])
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, tag: str = "",
+             **lower_kw) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_name, tag=tag)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, **lower_kw)
+        rec.update(meta)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        totals = hlo_accounting.account(hlo)  # loop-aware (see module doc)
+        coll = collective_bytes(hlo)          # raw (per-occurrence) parse
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=int(getattr(mem, "argument_size_in_bytes",
+                                           0)),
+                output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+                temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+                peak_bytes=int(getattr(mem, "temp_size_in_bytes", 0))
+                + int(getattr(mem, "argument_size_in_bytes", 0)),
+            ),
+            # loop-aware per-device accounting (hlo_accounting walker)
+            flops_per_device=float(totals.flops),
+            bytes_per_device=float(totals.bytes),
+            transcendentals_per_device=float(totals.transcendentals),
+            collective_bytes_per_device=dict(
+                {k: float(v) for k, v in totals.collectives.items()},
+                total=float(totals.collective_bytes)),
+            unknown_trip_loops=int(totals.unknown_trip_loops),
+            # raw XLA numbers for reference (loop bodies counted once)
+            xla_cost_flops=float(cost.get("flops", 0.0)),
+            xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+            raw_collective_bytes=coll,
+            n_devices=int(np.prod(list(mesh.shape.values()))),
+        )
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}{tag}: OK "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"coll/dev={totals.collective_bytes:.3e}B "
+              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print("  memory_analysis:", mem)
+    except Exception as e:  # record failures as bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"FAIL {type(e).__name__}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_name}{tag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs())
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--flat-cache", action="store_true",
+                    help="disable seq-axis KV cache sharding")
+    ap.add_argument("--n-micro", type=int, default=None)
+    args = ap.parse_args()
+    out = args.out or os.path.normpath(ARTIFACT_DIR)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out_dir=out, tag=args.tag,
+                               seq_shard_cache=not args.flat_cache,
+                               n_micro=args.n_micro)
+                n_fail += rec["status"] == "error"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

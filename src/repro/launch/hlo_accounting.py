@@ -1,0 +1,268 @@
+"""Loop-aware HLO accounting: FLOPs, bytes, collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+program built on lax.scan (layer stacks, microbatch accumulation, recurrent
+scans) is undercounted by the trip count. This walker parses the optimized
+per-device HLO text and recurses through called computations, multiplying
+while bodies by their ``known_trip_count`` backend_config.
+
+Counting rules (documented in EXPERIMENTS.md §Roofline):
+  * dot: 2 * prod(result_shape) * prod(lhs contracting dims)
+  * elementwise/transcendental inside fusions: 1 flop per output element
+  * bytes: operand + result sizes per top-level op (fusion internals are
+    register traffic and not counted) — matches XLA's own convention
+  * collectives: result-shape bytes per op occurrence, times loop trips
+  * while: body (+cond) totals x known_trip_count (1 if unknown, flagged)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "bf16": 2,
+                "f16": 2, "s16": 2, "u16": 2, "f32": 4, "s32": 4, "u32": 4,
+                "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "s2": 1, "u2": 1}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s2|u2|s4|u4|s8|u8|s16|u16|"
+    r"s32|u32|s64|u64|c64|c128|token)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_LCD_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "logistic", "exponential-minus-one", "log-plus-one", "sine", "cosine",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "atan2",
+    "remainder", "cbrt", "erf",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) summed over every array shape in a type string."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rhs: str            # everything after '='
+    result_type: str    # type portion of rhs (before opcode)
+    opcode: str
+    operands: list
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "Totals":
+        t = Totals(self.flops * k, self.bytes * k,
+                   self.transcendentals * k,
+                   {o: v * k for o, v in self.collectives.items()},
+                   self.unknown_trip_loops)
+        return t
+
+    def add(self, o: "Totals") -> None:
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        for k, v in o.collectives.items():
+            self.collectives[k] += v
+        self.unknown_trip_loops += o.unknown_trip_loops
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def _split_rhs(rhs: str) -> tuple[str, str, list]:
+    """rhs -> (result_type, opcode, operand names)."""
+    # result type = up to the opcode token; opcode = word before '('
+    i = rhs.find("(")
+    # walk back from '(' to find opcode word start; handle 'opcode(' with
+    # possible tuple types containing '(' — find the LAST 'word(' pattern
+    m = None
+    for mm in re.finditer(r"([a-z][\w\-]*)\(", rhs):
+        m = mm
+        # first opcode occurrence after the type is the real one: types are
+        # uppercase-free too, so take the first match that is not a dtype
+        if mm.group(1) not in _DTYPE_BYTES:
+            break
+    if m is None:
+        return rhs, "", []
+    opcode = m.group(1)
+    result_type = rhs[:m.start()]
+    # operand list: up to matching close paren
+    depth = 0
+    j = m.end() - 1
+    end = len(rhs)
+    for idx in range(j, len(rhs)):
+        if rhs[idx] == "(":
+            depth += 1
+        elif rhs[idx] == ")":
+            depth -= 1
+            if depth == 0:
+                end = idx
+                break
+    operands = _OPERAND_RE.findall(rhs[j:end])
+    del i
+    return result_type, opcode, operands
+
+
+def parse_computations(text: str) -> dict:
+    """name -> (list[Op], symbol_table name->result_type)."""
+    comps: dict = {}
+    cur = None
+    ops: list = []
+    sym: dict = {}
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s.startswith("ENTRY "):
+            m = re.match(r"ENTRY\s+%([\w.\-]+)", s)
+            cur = m.group(1)
+            entry = cur
+            ops, sym = [], {}
+            continue
+        if line.startswith("%") and line.rstrip().endswith("{"):
+            m = re.match(r"%([\w.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(1)
+                ops, sym = [], {}
+            continue
+        if s == "}":
+            if cur is not None:
+                comps[cur] = (ops, sym)
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        rtype, opcode, operands = _split_rhs(rhs)
+        op = Op(name=name, rhs=rhs, result_type=rtype, opcode=opcode,
+                operands=operands)
+        ops.append(op)
+        sym[name] = rtype
+    return {"comps": comps, "entry": entry}
+
+
+def _dot_flops(op: Op, sym: dict) -> float:
+    out_elems, _ = _shape_elems_bytes(op.result_type)
+    lcd = _LCD_RE.search(op.rhs)
+    if not lcd or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = sym.get(op.operands[0], "")
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 2.0 * out_elems
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    contract = 1
+    for ci in lcd.group(1).split(","):
+        if ci:
+            contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def account_computation(name: str, module: dict, cache: dict,
+                        count_bytes: bool = True) -> Totals:
+    if name in cache:
+        return cache[name]
+    ops, sym = module["comps"].get(name, ([], {}))
+    t = Totals()
+    for op in ops:
+        oc = op.opcode
+        if oc == "while":
+            body = _BODY_RE.search(op.rhs)
+            cond = _COND_RE.search(op.rhs)
+            trip_m = _TRIP_RE.search(op.rhs)
+            trips = int(trip_m.group(1)) if trip_m else 1
+            if not trip_m:
+                t.unknown_trip_loops += 1
+            inner = Totals()
+            if body:
+                inner.add(account_computation(body.group(1), module,
+                                              cache))
+            if cond:
+                inner.add(account_computation(cond.group(1), module,
+                                              cache))
+            t.add(inner.scaled(trips))
+            continue
+        if oc in ("fusion", "call", "async-start"):
+            called = _CALLS_RE.search(op.rhs)
+            if called:
+                inner = account_computation(called.group(1), module, cache)
+                # fusion internals: flops yes, bytes no (register traffic)
+                t.flops += inner.flops
+                t.transcendentals += inner.transcendentals
+                for k, v in inner.collectives.items():
+                    t.collectives[k] += v
+                t.unknown_trip_loops += inner.unknown_trip_loops
+            if count_bytes:
+                _, rb = _shape_elems_bytes(op.result_type)
+                ob = sum(_shape_elems_bytes(sym.get(o, ""))[1]
+                         for o in op.operands)
+                t.bytes += rb + ob
+            continue
+        if oc == "dot" or oc == "convolution":
+            t.flops += _dot_flops(op, sym)
+        elif oc in _ELEMENTWISE:
+            elems, _ = _shape_elems_bytes(op.result_type)
+            t.flops += elems
+            if oc in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                      "power", "logistic", "sine", "cosine", "erf"):
+                t.transcendentals += elems
+        elif oc == "reduce":
+            elems, _ = _shape_elems_bytes(
+                sym.get(op.operands[0], "") if op.operands else "")
+            t.flops += elems
+        base = oc.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES and not oc.endswith("-done"):
+            _, rb = _shape_elems_bytes(op.result_type)
+            t.collectives[base] += rb
+        if count_bytes and oc not in ("fusion", "call"):
+            _, rb = _shape_elems_bytes(op.result_type)
+            ob = sum(_shape_elems_bytes(sym.get(o, ""))[1]
+                     for o in op.operands)
+            if oc in ("parameter", "constant", "get-tuple-element",
+                      "tuple", "bitcast"):
+                continue
+            t.bytes += rb + ob
+    cache[name] = t
+    return t
+
+
+def account(hlo_text: str) -> Totals:
+    module = parse_computations(hlo_text)
+    if module["entry"] is None:
+        return Totals()
+    return account_computation(module["entry"], module, {})

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis carries
+only batch parallelism (gradient reduce crosses DCI once per step).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by tests and CPU examples."""
+    n = len(jax.devices())
+    n_data = n_data or max(n // n_model, 1)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

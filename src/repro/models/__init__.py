@@ -1,0 +1,5 @@
+"""Model zoo: composable JAX definitions of the 10 assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.lm import EPSetup, Model
+
+__all__ = ["ModelConfig", "Model", "EPSetup"]

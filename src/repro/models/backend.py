@@ -1,0 +1,59 @@
+"""Kernel backend dispatch.
+
+Pallas kernels lower only on TPU; on CPU (tests, dry-run) the pure-jnp
+oracles run under jit and XLA fuses them. ``use_pallas(True)`` switches the
+hot paths to the Pallas kernels (the TPU deployment default); kernels are
+also validated in interpret mode by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.ops import (decode_attention as
+                                                _decode_pallas)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import (flash_attention as
+                                               _flash_pallas)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ops import mamba_scan as _scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.moe_router.ops import moe_router as _router_pallas
+from repro.kernels.moe_router.ref import moe_router_ref
+
+_USE_PALLAS = False
+
+
+def use_pallas(on: bool = True) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = on
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True):
+    if _USE_PALLAS:
+        return _flash_pallas(q, k, v, causal, None, 128, 128,
+                             not _on_tpu())
+    return attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, *, kv_len=None):
+    if _USE_PALLAS and isinstance(kv_len, int):
+        return _decode_pallas(q, k, v, kv_len=kv_len,
+                              interpret=not _on_tpu())
+    return decode_attention_ref(q, k, v, kv_len=kv_len)
+
+
+def mamba_scan(u, delta, a, b, c, skip):
+    if _USE_PALLAS:
+        return _scan_pallas(u, delta, a, b, c, skip,
+                            interpret=not _on_tpu())
+    return mamba_scan_ref(u, delta, a, b, c, skip)
+
+
+def moe_router(logits, k: int):
+    if _USE_PALLAS:
+        return _router_pallas(logits, k, interpret=not _on_tpu())
+    return moe_router_ref(logits, k)

@@ -1,0 +1,257 @@
+"""Shared transformer layers: RMSNorm, RoPE, SwiGLU, GQA attention, MLA.
+
+Pure-functional: ``init_*`` builds param dicts, ``*_apply`` consumes them.
+Attention has three entry points per variant: train (full causal), prefill
+(causal, returns KV cache), decode (single token against a cache). The
+Pallas kernels are the TPU fast path; on CPU / in the dry-run the jnp
+oracle runs (kernels lower only on TPU) — see repro.models.backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import backend
+from repro.models.config import ModelConfig
+
+
+def norm_init(d: int) -> dict:
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["w"]).astype(x.dtype)
+
+
+def dense_init(key, n_in: int, n_out: int, dtype) -> jax.Array:
+    scale = n_in ** -0.5
+    return (jax.random.normal(key, (n_in, n_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------- RoPE ------------------------------------
+
+
+def rope_table(seq: int, dim: int, theta: float = 1e4
+               ) -> tuple[jax.Array, jax.Array]:
+    """(seq, dim/2) cos/sin tables."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D) rotated pairwise; cos/sin: (S, D/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cs = cos[None, :, None, :]
+    sn = sin[None, :, None, :]
+    return jnp.concatenate([x1 * cs - x2 * sn, x2 * cs + x1 * sn],
+                           axis=-1).astype(x.dtype)
+
+
+# -------------------------------- SwiGLU -----------------------------------
+
+
+def mlp_init(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": dense_init(k1, d, ff, dtype),
+            "wu": dense_init(k2, d, ff, dtype),
+            "wd": dense_init(k3, ff, d, dtype)}
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    return h @ p["wd"]
+
+
+# ----------------------------- GQA attention -------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, d_kv_src: int | None = None) -> dict:
+    """d_kv_src: source dim of K/V projections (cross-attention)."""
+    d, hd = cfg.d_model, cfg.hd
+    dkv = d_kv_src or d
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, cfg.n_heads * hd, cfg.dtype),
+        "wk": dense_init(k2, dkv, cfg.n_kv_heads * hd, cfg.dtype),
+        "wv": dense_init(k3, dkv, cfg.n_kv_heads * hd, cfg.dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, d, cfg.dtype),
+    }
+
+
+def _qkv(p, cfg, x, kv_src=None):
+    b, s, _ = x.shape
+    kv_src = x if kv_src is None else kv_src
+    sk = kv_src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (kv_src @ p["wk"]).reshape(b, sk, cfg.n_kv_heads, cfg.hd)
+    v = (kv_src @ p["wv"]).reshape(b, sk, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def attn_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+               cos: jax.Array, sin: jax.Array, *,
+               causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / encoder)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = backend.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attn_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+                     enc: jax.Array) -> jax.Array:
+    """Decoder cross-attention over encoder states (no RoPE, non-causal)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, kv_src=enc)
+    o = backend.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=False)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
+
+
+def attn_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
+                 cos: jax.Array, sin: jax.Array
+                 ) -> tuple[jax.Array, dict]:
+    """Causal attention returning the (B, Hkv, S, hd) KV cache."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kc = k.transpose(0, 2, 1, 3)
+    vc = v.transpose(0, 2, 1, 3)
+    o = backend.attention(q.transpose(0, 2, 1, 3), kc, vc, causal=True)
+    out = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
+    return out, {"k": kc, "v": vc}
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                pos: jax.Array, cos_t: jax.Array, sin_t: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """One-token decode. x: (B, 1, d); cache k/v: (B, Hkv, S, hd);
+    pos: () current position; cos_t/sin_t: (1, hd/2) tables at pos."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, cos_t, sin_t)[:, 0]          # (B, H, hd)
+    k = apply_rope(k, cos_t, sin_t)[:, 0]          # (B, Hkv, hd)
+    v = v[:, 0]
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k[:, :, None, :].astype(cache["k"].dtype), pos, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v[:, :, None, :].astype(cache["v"].dtype), pos, axis=2)
+    o = backend.decode_attention(q.transpose(0, 1, 2), kc, vc,
+                                 kv_len=pos + 1)
+    out = o.reshape(b, 1, -1) @ p["wo"]
+    return out, {"k": kc, "v": vc}
+
+
+# ------------------------ MLA (multi-head latent) ---------------------------
+
+
+def mla_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dq, dc = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, dq, cfg.dtype),
+        "q_norm": norm_init(dq),
+        "wq_b": dense_init(ks[1], dq, h * (dn + dr), cfg.dtype),
+        "wkv_a": dense_init(ks[2], d, dc + dr, cfg.dtype),
+        "kv_norm": norm_init(dc),
+        "wkv_b": dense_init(ks[3], dc, h * (dn + dv), cfg.dtype),
+        "wo": dense_init(ks[4], h * dv, d, cfg.dtype),
+    }
+
+
+def _mla_q(p, cfg, x, cos, sin):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = rms_norm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Training path: expand K/V from the latent and run causal MHA."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dc = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, cfg, x, cos, sin)
+    kv = x @ p["wkv_a"]
+    c_kv = rms_norm(p["kv_norm"], kv[..., :dc], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, dc:], cos, sin)      # (B,S,1,dr)
+    kvup = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kvup[..., :dn], kvup[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+    sm = (dn + dr) ** -0.5
+    o = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=True, sm_scale=sm)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
+
+
+def mla_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cos, sin
+                ) -> tuple[jax.Array, dict]:
+    """Prefill storing only the compressed latent cache (MLA's memory win):
+    cache = {c_kv: (B, S, dc), k_rope: (B, S, dr)}."""
+    b, s, _ = x.shape
+    dc = cfg.kv_lora_rank
+    out = mla_apply(p, cfg, x, cos, sin)
+    kv = x @ p["wkv_a"]
+    c_kv = rms_norm(p["kv_norm"], kv[..., :dc], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, dc:], cos, sin)[:, :, 0]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array, cos_t, sin_t) -> tuple[jax.Array, dict]:
+    """Absorbed-matrix decode entirely in latent space (DeepSeek-V2 §MLA):
+    scores_h,s = <W_UK_h^T q_nope_h, c_s> + <q_rope_h, k_rope_s>;
+    out_h = W_UV_h (sum_s p_s c_s). Cost per token: O(S*(dc+dr)) instead of
+    O(S*H*(dn+dv)) — the KV cache stays (B, S, dc+dr)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dc = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, cfg, x, cos_t, sin_t)       # (B,1,H,*)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]            # (B,H,dn/dr)
+    kv = (x @ p["wkv_a"])[:, 0]
+    c_t = rms_norm(p["kv_norm"], kv[..., :dc], cfg.norm_eps)
+    kr_t = apply_rope(kv[:, None, None, dc:], cos_t, sin_t)[:, 0, 0]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_t[:, None].astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_t[:, None].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+    # absorb W_UK into q:  q_lat (B, H, dc)
+    wkv_b = p["wkv_b"].reshape(dc, h, dn + dv)
+    w_uk = wkv_b[..., :dn]                                  # (dc, H, dn)
+    w_uv = wkv_b[..., dn:]                                  # (dc, H, dv)
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    qq = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1)
+    kk = jnp.concatenate([c_kv, k_rope], -1)[:, None]       # (B,1,S,dc+dr)
+    sm = (dn + dr) ** -0.5
+    o_lat = decode_attention_ref(
+        qq, kk, c_kv[:, None], sm_scale=sm, kv_len=pos + 1)  # (B,H,dc)
+    out = jnp.einsum("bhc,chv->bhv", o_lat.astype(jnp.float32),
+                     w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

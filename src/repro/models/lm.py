@@ -1,0 +1,460 @@
+"""Model assembly for all 10 assigned architectures.
+
+A model is a sequence of homogeneous *layer groups*; each group's layers are
+parameter-stacked and executed with jax.lax.scan (+ remat), keeping the HLO
+size O(#groups) rather than O(#layers) — essential for 95-layer /
+61-layer-MoE configs compiled for 512 devices.
+
+Groups by family:
+  dense        [attn + SwiGLU] * L
+  moe          optional dense prefix + [attn|MLA + routed MoE] * L'
+  ssm          [mamba] * L
+  hybrid       [6x(mamba+ff/moe alternating), mamba+moe, attn+moe] * (L/8)
+  vlm          dense backbone; precomputed patch embeddings prepended
+  encdec       encoder [attn + ff] * Le (non-causal, stub frame embeddings)
+               + decoder [self-attn + cross-attn + ff] * Ld
+
+Three execution modes share the layer code: ``loss`` (training),
+``prefill`` (returns per-layer caches), ``decode_step`` (one token against
+caches). MoE layers run expert-parallel inside shard_map when an EPSetup is
+provided (see models/moe.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba as Mb
+from repro.models import moe as Moe
+from repro.models.config import ModelConfig
+
+try:  # jax >= 0.6
+    from jax.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+@dataclasses.dataclass(frozen=True)
+class EPSetup:
+    """Mesh context for expert parallelism + data-parallel axes."""
+
+    mesh: Any
+    dp_axes: tuple
+    ep_axis: str = "model"
+    n_shards: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding context: constrains layer activations to stay
+    batch-sharded over the dp axes. Without this, GSPMD can propagate the
+    FSDP (feature-dim) weight sharding into activations and silently
+    replicate the batch on every device (measured 3.2x per-device FLOPs —
+    EXPERIMENTS.md §Perf)."""
+
+    mesh: Any
+    dp_axes: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    kind: str          # dense | moe | ssm | hybrid | encoder | decoder_x
+    n: int             # number of layers (hybrid: number of periods)
+    causal: bool = True
+    use_mla: bool = False
+    ff: int = 0        # dense ff dim (0 -> no dense mlp)
+    moe: bool = False
+
+
+def _groups(cfg: ModelConfig) -> list[Group]:
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        return [Group("dense", cfg.n_layers, ff=cfg.d_ff)]
+    if f == "moe":
+        gs = []
+        if cfg.first_dense_layers:
+            gs.append(Group("dense", cfg.first_dense_layers,
+                            use_mla=cfg.use_mla,
+                            ff=cfg.dense_d_ff or cfg.d_ff))
+        gs.append(Group("moe", cfg.n_layers - cfg.first_dense_layers,
+                        use_mla=cfg.use_mla, moe=True))
+        return gs
+    if f == "ssm":
+        return [Group("ssm", cfg.n_layers)]
+    if f == "hybrid":
+        assert cfg.attn_period and cfg.n_layers % cfg.attn_period == 0
+        return [Group("hybrid", cfg.n_layers // cfg.attn_period, moe=True)]
+    if f == "encdec":
+        return [Group("encoder", cfg.encoder_layers, causal=False,
+                      ff=cfg.d_ff),
+                Group("decoder_x", cfg.n_layers, ff=cfg.d_ff)]
+    raise ValueError(f)
+
+
+# --------------------------- layer init helpers -----------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, g: Group) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict = {"ln1": L.norm_init(cfg.d_model)}
+    if g.kind in ("dense", "moe", "encoder", "decoder_x"):
+        p["attn"] = (L.mla_init(ks[0], cfg) if g.use_mla
+                     else L.attn_init(ks[0], cfg))
+        p["ln2"] = L.norm_init(cfg.d_model)
+        if g.kind == "decoder_x":
+            p["xattn"] = L.attn_init(ks[1], cfg)
+            p["ln_x"] = L.norm_init(cfg.d_model)
+        if g.moe:
+            p["moe"] = Moe.moe_init(ks[2], cfg)
+        if g.ff:
+            p["mlp"] = L.mlp_init(ks[3], cfg.d_model, g.ff, cfg.dtype)
+    elif g.kind == "ssm":
+        p["mamba"] = Mb.mamba_init(ks[0], cfg)
+    elif g.kind == "hybrid":
+        period = cfg.attn_period
+        n_mamba = period - 1
+        p["mamba"] = jax.vmap(lambda k: Mb.mamba_init(k, cfg))(
+            jax.random.split(ks[0], n_mamba))
+        p["attn"] = L.attn_init(ks[1], cfg)
+        n_moe = period // cfg.moe_every
+        n_ff = period - n_moe
+        p["moe"] = jax.vmap(lambda k: Moe.moe_init(k, cfg))(
+            jax.random.split(ks[2], n_moe))
+        if n_ff:
+            p["mlp"] = jax.vmap(
+                lambda k: L.mlp_init(k, cfg.d_model, cfg.d_ff, cfg.dtype))(
+                jax.random.split(ks[3], n_ff))
+        p["ln"] = {"w": jnp.ones((2 * period, cfg.d_model), jnp.float32)}
+    return p
+
+
+# ------------------------------- the model ---------------------------------
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, ep: Optional[EPSetup] = None,
+                 shard_ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.ep = ep
+        self.shard_ctx = shard_ctx
+        self.groups = _groups(cfg)
+
+    def _constrain(self, x: jax.Array) -> jax.Array:
+        """Pin activations (B, S, d) to batch sharding over the dp axes."""
+        ctx = self.shard_ctx
+        if ctx is None:
+            return x
+        import numpy as np
+        from jax.sharding import NamedSharding
+        n_dp = int(np.prod([ctx.mesh.shape[a] for a in ctx.dp_axes]))
+        if x.shape[0] % n_dp != 0:
+            return x
+        spec = P(ctx.dp_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, spec))
+
+    # ------------------------------ init ----------------------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, len(self.groups) + 3)
+        params: dict = {
+            "embed": (jax.random.normal(
+                ks[0], (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                * cfg.d_model ** -0.5).astype(cfg.dtype),
+            "ln_f": L.norm_init(cfg.d_model),
+            "head": L.dense_init(ks[1], cfg.d_model, cfg.padded_vocab,
+                                 cfg.dtype),
+        }
+        for gi, g in enumerate(self.groups):
+            gkeys = jax.random.split(ks[2 + gi], g.n)
+            params[f"g{gi}"] = jax.vmap(
+                lambda k, g=g: _layer_init(k, cfg, g))(gkeys)
+        return params
+
+    # --------------------------- MoE plumbing ------------------------------
+
+    def _routed(self, p_moe: dict, x: jax.Array) -> jax.Array:
+        cfg, ep = self.cfg, self.ep
+        if ep is None or ep.n_shards == 1:
+            y = Moe.moe_apply({k: v for k, v in p_moe.items()
+                               if k != "shared"}, cfg, x, None)
+        else:
+            espec = {"router": P(), "wg": P(ep.ep_axis, None, None),
+                     "wu": P(ep.ep_axis, None, None),
+                     "wd": P(ep.ep_axis, None, None)}
+            import numpy as np
+            n_dp = int(np.prod([ep.mesh.shape[a] for a in ep.dp_axes]))
+            # batch=1 decode can't split over dp: run routing replicated
+            bdim = ep.dp_axes if x.shape[0] % n_dp == 0 else None
+            xspec = P(bdim, None, None)
+            ctx = Moe.EPContext(axis=ep.ep_axis, n_shards=ep.n_shards)
+            fn = shard_map(
+                lambda pm, xl: Moe.moe_apply(pm, self.cfg, xl, ctx),
+                mesh=ep.mesh,
+                in_specs=(espec, xspec), out_specs=xspec,
+                check_rep=False)
+            y = fn({k: v for k, v in p_moe.items() if k != "shared"}, x)
+        if "shared" in p_moe:
+            y = y + L.mlp_apply(p_moe["shared"], x)
+        return y
+
+    # --------------------------- layer bodies ------------------------------
+
+    def _attn_sublayer(self, p, x, cos, sin, mode, cache, pos, causal):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        if mode == "train":
+            if cfg.use_mla and "wq_a" in p["attn"]:
+                return x + L.mla_apply(p["attn"], cfg, h, cos, sin), None
+            return x + L.attn_apply(p["attn"], cfg, h, cos, sin,
+                                    causal=causal), None
+        if mode == "prefill":
+            if cfg.use_mla and "wq_a" in p["attn"]:
+                o, c = L.mla_prefill(p["attn"], cfg, h, cos, sin)
+            else:
+                o, c = L.attn_prefill(p["attn"], cfg, h, cos, sin)
+            return x + o, c
+        # decode
+        if cfg.use_mla and "wq_a" in p["attn"]:
+            o, c = L.mla_decode(p["attn"], cfg, h, cache, pos, cos, sin)
+        else:
+            o, c = L.attn_decode(p["attn"], cfg, h, cache, pos, cos, sin)
+        return x + o, c
+
+    def _ff_sublayer(self, p, x):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        out = jnp.zeros_like(x)
+        if "moe" in p:
+            out = out + self._routed(p["moe"], h)
+        if "mlp" in p:
+            out = out + L.mlp_apply(p["mlp"], h)
+        return x + out
+
+    def _std_layer(self, p, x, cos, sin, mode, cache, pos, causal,
+                   enc=None):
+        x, c = self._attn_sublayer(p, x, cos, sin, mode, cache, pos, causal)
+        if enc is not None:  # decoder cross-attention
+            hx = L.rms_norm(p["ln_x"], x, self.cfg.norm_eps)
+            x = x + L.cross_attn_apply(p["xattn"], self.cfg, hx, enc)
+        x = self._ff_sublayer(p, x)
+        return x, c
+
+    def _ssm_layer(self, p, x, mode, cache):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        if mode == "train":
+            return x + Mb.mamba_apply(p["mamba"], cfg, h), None
+        if mode == "prefill":
+            o, c = Mb.mamba_prefill(p["mamba"], cfg, h)
+            return x + o, c
+        o, c = Mb.mamba_decode(p["mamba"], cfg, h, cache)
+        return x + o, c
+
+    def _hybrid_period(self, p, x, cos, sin, mode, cache, pos):
+        """One jamba period: (period-1) mamba layers + 1 attention layer;
+        MoE on every ``moe_every``-th sublayer, dense FF otherwise."""
+        cfg = self.cfg
+        period = cfg.attn_period
+        caches = {}
+        i_moe = i_ff = 0
+        for j in range(period):
+            ln1 = jax.tree_util.tree_map(lambda a: a[2 * j], p["ln"])
+            ln2 = jax.tree_util.tree_map(lambda a: a[2 * j + 1], p["ln"])
+            is_attn = j == period - 1
+            if is_attn:
+                sub = {"ln1": ln1, "attn": p["attn"]}
+                x, c = self._attn_sublayer(sub, x, cos, sin, mode,
+                                           None if cache is None
+                                           else cache["attn"], pos, True)
+                caches["attn"] = c
+            else:
+                sub = {"ln1": ln1,
+                       "mamba": jax.tree_util.tree_map(
+                           lambda a, j=j: a[j], p["mamba"])}
+                x, c = self._ssm_layer(sub, x, mode,
+                                       None if cache is None else
+                                       jax.tree_util.tree_map(
+                                           lambda a, j=j: a[j],
+                                           cache["mamba"]))
+                if c is not None:
+                    caches.setdefault("mamba_list", []).append(c)
+            # ff sublayer
+            h = L.rms_norm(ln2, x, cfg.norm_eps)
+            if (j % cfg.moe_every) == (cfg.moe_every - 1):
+                pm = jax.tree_util.tree_map(lambda a, i=i_moe: a[i],
+                                            p["moe"])
+                x = x + self._routed(pm, h)
+                i_moe += 1
+            else:
+                pf = jax.tree_util.tree_map(lambda a, i=i_ff: a[i],
+                                            p["mlp"])
+                x = x + L.mlp_apply(pf, h)
+                i_ff += 1
+        if mode == "prefill":
+            caches["mamba"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *caches.pop("mamba_list"))
+        elif mode == "decode":
+            if "mamba_list" in caches:
+                caches["mamba"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *caches.pop("mamba_list"))
+        return x, (caches if mode != "train" else None)
+
+    # ----------------------------- group scan ------------------------------
+
+    def _run_group(self, gi: int, g: Group, params, x, cos, sin, mode,
+                   caches=None, pos=None, enc=None):
+        """Scan group gi's stacked layers. Returns (x, new_caches)."""
+        p_stack = params[f"g{gi}"]
+
+        def body(x, xs):
+            p_layer, cache = xs
+            if g.kind == "ssm":
+                out, c = self._ssm_layer(p_layer, x, mode, cache)
+            elif g.kind == "hybrid":
+                out, c = self._hybrid_period(p_layer, x, cos, sin, mode,
+                                             cache, pos)
+            else:
+                out, c = self._std_layer(p_layer, x, cos, sin, mode, cache,
+                                         pos, g.causal, enc=enc)
+            return out, c
+
+        if mode == "train":
+            def f(x, p_layer):
+                out, _ = body(self._constrain(x), (p_layer, None))
+                return self._constrain(out), None
+            x, _ = jax.lax.scan(jax.checkpoint(f), x, p_stack)
+            return x, None
+        if mode == "prefill":
+            def f(x, p_layer):
+                out, c = body(self._constrain(x), (p_layer, None))
+                return self._constrain(out), c
+            x, cs = jax.lax.scan(f, x, p_stack)
+            return x, cs
+        # decode: caches are scanned alongside params
+        def f(x, xs):
+            out, c = body(self._constrain(x), xs)
+            return self._constrain(out), c
+        x, cs = jax.lax.scan(f, x, (p_stack, caches))
+        return x, cs
+
+    # ------------------------------- embed ---------------------------------
+
+    def _embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(cfg.dtype), x], axis=1)
+        return self._constrain(x)
+
+    def _logits(self, params, x) -> jax.Array:
+        return (x @ params["head"]).astype(jnp.float32)
+
+    def _encode(self, params, batch, mode="train"):
+        """Run the encoder stack on stub frame embeddings (encdec only)."""
+        cfg = self.cfg
+        enc = batch["frame_embeds"].astype(cfg.dtype)
+        s = enc.shape[1]
+        cos, sin = L.rope_table(s, cfg.hd, cfg.rope_theta)
+        enc, _ = self._run_group(0, self.groups[0], params, enc, cos, sin,
+                                 "train")
+        return L.rms_norm(params["ln_f"], enc, cfg.norm_eps)
+
+    # ------------------------------- modes ---------------------------------
+
+    def loss_fn(self, params, batch) -> jax.Array:
+        """Causal LM cross-entropy (vocab-sharding friendly: reductions +
+        one-hot einsum, never a gather over the sharded vocab axis)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        cos, sin = L.rope_table(s, self._rope_dim(), cfg.rope_theta)
+        enc = None
+        g0 = 0
+        if cfg.family == "encdec":
+            enc = self._encode(params, batch)
+            g0 = 1
+        for gi in range(g0, len(self.groups)):
+            x, _ = self._run_group(gi, self.groups[gi], params, x, cos, sin,
+                                   "train", enc=enc)
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            x = x[:, batch["patch_embeds"].shape[1]:]
+
+        def head_loss(head_w, xs, labels):
+            logits = (xs @ head_w).astype(jnp.float32)
+            m = jnp.max(logits, axis=-1, keepdims=True)
+            lse = (m[..., 0]
+                   + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)))
+            onehot = jax.nn.one_hot(labels, cfg.padded_vocab,
+                                    dtype=jnp.bfloat16)
+            label_logit = jnp.sum(logits * onehot, axis=-1)
+            nll = lse - label_logit
+            zloss = 1e-4 * jnp.mean(lse ** 2)  # logit drift regularizer
+            return jnp.mean(nll) + zloss
+
+        # checkpoint the head: (tokens, padded_vocab) fp32 logits are
+        # recomputed in the backward instead of living across it
+        return jax.checkpoint(head_loss)(params["head"], x,
+                                         batch["labels"])
+
+    def prefill(self, params, batch):
+        """Returns (last-token logits, caches list per group)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        cos, sin = L.rope_table(s, self._rope_dim(), cfg.rope_theta)
+        enc = None
+        g0 = 0
+        caches: list = []
+        if cfg.family == "encdec":
+            enc = self._encode(params, batch)
+            caches.append({"enc": enc})
+            g0 = 1
+        for gi in range(g0, len(self.groups)):
+            x, c = self._run_group(gi, self.groups[gi], params, x, cos, sin,
+                                   "prefill", enc=enc)
+            caches.append(c)
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return self._logits(params, x[:, -1:]), caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens: (B, 1) int32; pos: scalar int32 — current position.
+        Returns (logits (B, 1, V) fp32, new caches)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.dtype)
+        cos_t, sin_t = self._rope_at(pos)
+        enc = None
+        g0 = 0
+        new_caches: list = []
+        if cfg.family == "encdec":
+            enc = caches[0]["enc"]
+            new_caches.append(caches[0])
+            g0 = 1
+        for gi in range(g0, len(self.groups)):
+            x, c = self._run_group(gi, self.groups[gi], params, x, cos_t,
+                                   sin_t, "decode", caches=caches[gi],
+                                   pos=pos, enc=enc)
+            new_caches.append(c)
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return self._logits(params, x), new_caches
+
+    # ------------------------------ helpers --------------------------------
+
+    def _rope_dim(self) -> int:
+        return self.cfg.qk_rope_dim if self.cfg.use_mla else self.cfg.hd
+
+    def _rope_at(self, pos):
+        dim = self._rope_dim()
+        inv = 1.0 / (self.cfg.rope_theta
+                     ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+        f = pos.astype(jnp.float32) * inv
+        return jnp.cos(f)[None], jnp.sin(f)[None]

@@ -1,0 +1,127 @@
+"""Mamba-1 block (falcon-mamba / jamba hybrid layers).
+
+in_proj -> (x, z); causal depthwise conv1d + silu on x; data-dependent
+(delta, B, C) from x_proj; selective scan (Pallas kernel on TPU, jnp oracle
+elsewhere); gate by silu(z); out_proj. Decode path carries (conv window,
+ssm state) per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.models import backend
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * n, cfg.dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, cfg.dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": a_init,                       # A = -exp(a_log)  (D, N)
+        "skip": jnp.ones((di,), jnp.float32),  # D
+        "out_proj": dense_init(ks[4], di, d, cfg.dtype),
+    }
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, Di); w: (K, Di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(p, cfg, xc):
+    """xc: (B, L, Di) post-conv activations -> (delta, B, C)."""
+    n, dtr = cfg.ssm_state, cfg.dt_rank
+    proj = xc @ p["x_proj"]                        # (B, L, dtr + 2N)
+    dt = proj[..., :dtr] @ p["dt_proj"]            # (B, L, Di)
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    bmat = proj[..., dtr:dtr + n]
+    cmat = proj[..., dtr + n:]
+    return delta.astype(xc.dtype), bmat, cmat
+
+
+def mamba_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence path. x: (B, L, d)."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_conv1d_causal(xin, p["conv_w"], p["conv_b"]))
+    delta, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])
+    y = backend.mamba_scan(xc, delta, a, bmat, cmat, p["skip"])
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def mamba_prefill(p: dict, cfg: ModelConfig, x: jax.Array
+                  ) -> tuple[jax.Array, dict]:
+    """Full-sequence pass that also returns the recurrent decode state."""
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    b, ell, _ = x.shape
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_conv1d_causal(xin, p["conv_w"], p["conv_b"]))
+    delta, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])
+    y, hf = _scan_with_state(xc, delta, a, bmat, cmat, p["skip"])
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    conv_state = xin[:, -(k - 1):, :] if ell >= k - 1 else jnp.pad(
+        xin, ((0, 0), (k - 1 - ell, 0), (0, 0)))
+    return out, {"h": hf, "conv": conv_state}
+
+
+def _scan_with_state(u, delta, a, bmat, cmat, skip):
+    """Single scan returning both outputs and the final recurrent state
+    (avoids the 2x recompute a separate final-state pass would cost)."""
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        decay = jnp.exp(dt_t[..., None] * a[None])
+        h = decay * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + skip[None] * u_t
+        return h, y
+
+    bsz, _, d = u.shape
+    n = a.shape[1]
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    args = tuple(t.astype(jnp.float32).transpose(1, 0, 2)
+                 for t in (u, delta, bmat, cmat))
+    hf, ys = jax.lax.scan(step, h0, (args[0], args[1], args[2], args[3]))
+    return ys.transpose(1, 0, 2).astype(u.dtype), hf
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token recurrent step. x: (B, 1, d);
+    state: {h: (B, Di, N) f32, conv: (B, K-1, Di)}."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]            # (B, 1, Di)
+    window = jnp.concatenate([state["conv"], xin], axis=1)  # (B, K, Di)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]               # (B, 1, Di)
+    delta, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])
+    dt = delta[:, 0].astype(jnp.float32)           # (B, Di)
+    decay = jnp.exp(dt[..., None] * a[None])
+    h = decay * state["h"] + (dt * xc[:, 0])[..., None] \
+        * bmat[:, 0].astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32)) \
+        + p["skip"] * xc[:, 0]
+    out = (y[:, None].astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer with expert parallelism.
+
+Two execution paths share one grouped-FFN core:
+
+  * local (single device / smoke tests): all experts resident, tokens
+    dispatched by a sort-based capacity gather (no (T, E, C) one-hot —
+    memory stays O(T·k·d)).
+  * EP (production, inside shard_map): experts are sharded over the
+    ``model`` mesh axis; activations arrive replicated across that axis, so
+    each shard routes all local tokens, computes only the copies destined
+    for its resident experts, and the partial outputs are psum-reduced.
+    This is the *baseline* EP schedule (collective cost = one (T, d)
+    all-reduce, like a TP MLP); the all-to-all dispatch variant is the
+    §Perf hillclimb in EXPERIMENTS.md.
+
+Router: top-k softmax with renormalization (Qwen3 semantics; DeepSeek-V3's
+sigmoid+bias-corrected router reduces to the same dispatch shape — noted in
+DESIGN.md deviations). Shared experts (DeepSeek-V3) are a dense SwiGLU
+always-on path added outside the routed computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import backend
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class EPContext:
+    """How the MoE layer is placed on the mesh (None = single device)."""
+
+    axis: str = "model"       # mesh axis holding experts
+    n_shards: int = 1
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32)
+                   * scale).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (e, d, ff), jnp.float32)
+               * scale).astype(cfg.dtype),
+        "wu": (jax.random.normal(ks[2], (e, d, ff), jnp.float32)
+               * scale).astype(cfg.dtype),
+        "wd": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+               * (ff ** -0.5)).astype(cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, ff * cfg.n_shared_experts,
+                               cfg.dtype)
+    return p
+
+
+def grouped_ffn(x: jax.Array, idx: jax.Array, w: jax.Array,
+                valid: jax.Array, wg: jax.Array, wu: jax.Array,
+                wd: jax.Array, capacity: int) -> jax.Array:
+    """Sort-based capacity dispatch + grouped SwiGLU + weighted combine.
+
+    x: (T, d); idx: (T, k) expert ids in [0, E); w: (T, k) combine weights;
+    valid: (T, k) bool (invalid copies take no capacity);
+    wg/wu: (E, d, f); wd: (E, f, d). Over-capacity copies are dropped.
+    """
+    t, d = x.shape
+    k = idx.shape[1]
+    e = wg.shape[0]
+    c = capacity
+    flat_e = jnp.where(valid, idx, e).reshape(-1)      # invalid -> expert E
+    order = jnp.argsort(flat_e)                        # stable
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e + 1))
+    pos_in_e = jnp.arange(t * k) - starts[jnp.minimum(sorted_e, e)]
+    keep = (pos_in_e < c) & (sorted_e < e)
+    slot = jnp.where(keep, sorted_e * c + pos_in_e, e * c)
+    tok = order // k
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(x[tok])
+    xe = buf[:e * c].reshape(e, c, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) \
+        * jnp.einsum("ecd,edf->ecf", xe, wu)
+    ye = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e * c, d)
+    y_cp = jnp.where(keep[:, None],
+                     ye[jnp.minimum(slot, e * c - 1)], 0.0)
+    w_cp = w.reshape(-1)[order]
+    out = jnp.zeros((t, d), x.dtype).at[tok].add(
+        (y_cp * w_cp[:, None]).astype(x.dtype))
+    return out
+
+
+def _route(router_w: jax.Array, x: jax.Array, top_k: int):
+    logits = x.astype(jnp.float32) @ router_w
+    return backend.moe_router(logits, top_k)
+
+
+def _capacity(tokens: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(math.ceil(tokens * top_k / n_experts * cf))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              ep: EPContext | None = None) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). In EP mode this function must be called
+    *inside* shard_map with ``p`` holding the local expert slices and x the
+    local activations (replicated over the EP axis)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    w, idx = _route(p["router"], xt, cfg.top_k)
+    w = w.astype(x.dtype)
+
+    if ep is None or ep.n_shards == 1:
+        cap = _capacity(b * s, cfg.n_experts, cfg.top_k,
+                        cfg.capacity_factor)
+        y = grouped_ffn(xt, idx, w, jnp.ones_like(idx, bool),
+                        p["wg"], p["wu"], p["wd"], cap)
+    else:
+        e_loc = cfg.n_experts // ep.n_shards
+        me = jax.lax.axis_index(ep.axis)
+        mine = (idx // e_loc) == me
+        idx_loc = jnp.where(mine, idx - me * e_loc, 0)
+        # per-expert capacity is mesh-size independent: expected tokens per
+        # expert = T*k/E whether or not experts are sharded
+        cap = _capacity(b * s, cfg.n_experts, cfg.top_k,
+                        cfg.capacity_factor)
+        y = grouped_ffn(xt, idx_loc, w, mine,
+                        p["wg"], p["wu"], p["wd"], cap)
+        y = jax.lax.psum(y, ep.axis)
+
+    out = y.reshape(b, s, d)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+    return out
+
+
+def aux_load_balance_loss(p: dict, cfg: ModelConfig, x: jax.Array
+                          ) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean fraction * prob)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    probs = jax.nn.softmax(xt.astype(jnp.float32) @ p["router"], -1)
+    _, idx = backend.moe_router(
+        xt.astype(jnp.float32) @ p["router"], cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * probs.mean(0))

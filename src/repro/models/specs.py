@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+The dry-run lowers against these stand-ins — weak-type-correct, shardable,
+zero device allocation. Decode cache specs are derived with jax.eval_shape
+of the model's own prefill, so they always match the real cache pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.lm import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                with_labels: bool) -> dict:
+    d: dict = {}
+    if cfg.family == "encdec":
+        d["frame_embeds"] = SDS((batch, cfg.frontend_tokens, cfg.d_model),
+                                jnp.bfloat16)
+        d["tokens"] = SDS((batch, seq), jnp.int32)
+    elif cfg.family == "vlm":
+        d["patch_embeds"] = SDS((batch, cfg.frontend_tokens, cfg.d_model),
+                                jnp.bfloat16)
+        d["tokens"] = SDS((batch, seq - cfg.frontend_tokens), jnp.int32)
+    else:
+        d["tokens"] = SDS((batch, seq), jnp.int32)
+    if with_labels:
+        d["labels"] = SDS(d["tokens"].shape, jnp.int32)
+    return d
+
+
+def params_specs(model: Model, seed: int = 0):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(seed)))
+
+
+def input_specs(model: Model, shape: ShapeSpec) -> dict:
+    """Returns {mode-specific inputs} for lowering, keyed per shape.kind:
+      train   -> {batch}
+      prefill -> {batch}
+      decode  -> {caches, tokens, pos} (cache specs via eval_shape(prefill))
+    """
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, b, s, True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, b, s, False)}
+    # decode: caches sized for a seq_len context
+    pb = batch_specs(cfg, b, s, False)
+    ps = params_specs(model)
+    _, caches = jax.eval_shape(model.prefill, ps, pb)
+    return {
+        "caches": caches,
+        "tokens": SDS((b, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }

@@ -1,0 +1,71 @@
+"""KV-cache utilities for the serving engine.
+
+Caches are the model-defined pytrees (per layer group, stacked over
+layers). This module provides allocation at a fixed max length (decode
+writes in place via dynamic_update_slice), plus the slot bookkeeping for
+continuous batching: each batch row is a slot that can be re-assigned to a
+new request when its sequence finishes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alloc_like(cache_specs, batch: int | None = None):
+    """Zero caches matching eval_shape'd specs (optionally re-batched)."""
+
+    def f(sds):
+        shape = sds.shape
+        if batch is not None:
+            # batch dim is the one after the layer-stack dim by convention
+            shape = (shape[0], batch) + shape[2:] \
+                if len(shape) > 1 else shape
+        return jnp.zeros(shape, sds.dtype)
+
+    return jax.tree_util.tree_map(f, cache_specs)
+
+
+def pad_to_length(caches, target_len: int):
+    """Right-pad every attention cache's seq axis to target_len."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("k", "v", "c_kv", "k_rope") and hasattr(v, "ndim"):
+                    ax = v.ndim - 2
+                    pad = target_len - v.shape[ax]
+                    if pad > 0:
+                        w = [(0, 0)] * v.ndim
+                        w[ax] = (0, pad)
+                        v = jnp.pad(v, w)
+                    out[k] = v
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return [walk(c) for c in caches]
+
+
+class SlotManager:
+    """Continuous-batching slot table: request id per batch row."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots: list[int | None] = [None] * n_slots
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def assign(self, req_id: int) -> int:
+        i = self.free_slots()[0]
+        self.slots[i] = req_id
+        return i
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+
+    def active(self) -> dict[int, int]:
+        return {i: r for i, r in enumerate(self.slots) if r is not None}

@@ -1,0 +1,6 @@
+"""CloudSim-analogue simulator: the paper's evaluation substrate in JAX/numpy."""
+from repro.sim.config import SimConfig, small
+from repro.sim.engine import NoMitigation, SimAction, Simulation, Technique
+
+__all__ = ["SimConfig", "small", "Simulation", "Technique", "SimAction",
+           "NoMitigation"]

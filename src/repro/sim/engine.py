@@ -1,0 +1,366 @@
+"""Discrete-interval cloud simulation engine (CloudSim analogue, §4.3).
+
+Semantics per scheduling interval (300 s):
+  1. host downtimes tick down; new jobs arrive (Poisson);
+  2. the bound straggler Technique sees submissions (clone/delay hooks);
+  3. pending tasks are placed by the shared scheduler (VM-creation faults
+     bounce placements);
+  4. Weibull fault events fire (host downtime -> resident tasks restart;
+     cloudlet faults -> task restarts);
+  5. the Technique's interval hook emits speculate/rerun actions;
+  6. tasks progress at host effective speed (contention + heterogeneity);
+     completions are interpolated within the interval;
+  7. metrics are recorded; completed jobs update per-host straggler
+     moving averages (ground truth via per-job Pareto-K threshold).
+
+Speculative copies are first-result-wins: whichever of {original, copy}
+finishes first completes the logical task and cancels the others.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+
+import numpy as np
+
+from repro.core import pareto
+from repro.sim import metrics as M
+from repro.sim.cluster import Cluster
+from repro.sim.config import SimConfig
+from repro.sim.faults import FaultInjector, FaultKind
+from repro.sim.scheduler import Scheduler, UtilizationAwareScheduler
+from repro.sim.workload import WorkloadGenerator
+
+PENDING, RUNNING, DONE, CANCELLED = 0, 1, 2, 3
+
+
+class TaskTable:
+    """Struct-of-arrays task store with amortized growth."""
+
+    _F = dict(job_id=np.int64, state=np.int8, host=np.int64,
+              work=np.float64, progress=np.float64, submit_s=np.float64,
+              start_s=np.float64, finish_s=np.float64, deadline_s=np.float64,
+              is_deadline=bool, sla_weight=np.float64, restarts=np.int64,
+              is_copy=bool, orig=np.int64, delayed_until=np.int64,
+              prev_host=np.int64)
+
+    def __init__(self, cap: int = 1024):
+        self.n = 0
+        self._cap = cap
+        for f, dt in self._F.items():
+            setattr(self, f, np.zeros(cap, dt))
+        self.req = np.zeros((cap, 4))
+
+    def _grow(self, need: int) -> None:
+        while self.n + need > self._cap:
+            self._cap *= 2
+        for f, dt in self._F.items():
+            a = getattr(self, f)
+            b = np.zeros(self._cap, dt)
+            b[:len(a)] = a
+            setattr(self, f, b)
+        r = np.zeros((self._cap, 4))
+        r[:len(self.req)] = self.req
+        self.req = r
+
+    def add(self, **kw) -> int:
+        self._grow(1)
+        i = self.n
+        self.n += 1
+        self.host[i] = -1
+        self.orig[i] = -1
+        self.prev_host[i] = -1
+        self.finish_s[i] = -1.0
+        for k, v in kw.items():
+            getattr(self, k)[i] = v
+        return i
+
+    def active_mask(self) -> np.ndarray:
+        return (self.state[:self.n] == RUNNING)
+
+    def view(self, field: str) -> np.ndarray:
+        return getattr(self, field)[:self.n]
+
+
+@dataclasses.dataclass
+class SimAction:
+    kind: str              # speculate | rerun | delay | clone
+    task: int
+    target: int | None = None
+    delay: int = 1
+    n_clones: int = 1
+
+
+class Technique:
+    """Base class for straggler prediction/mitigation techniques."""
+
+    name = "none"
+
+    def bind(self, sim: "Simulation") -> None:
+        self.sim = sim
+
+    def on_submit(self, new_idx: np.ndarray) -> list[SimAction]:
+        return []
+
+    def on_interval(self) -> list[SimAction]:
+        return []
+
+    def predicted_straggler_count(self) -> float | None:
+        return None
+
+
+class NoMitigation(Technique):
+    name = "none"
+
+
+class Simulation:
+    def __init__(self, cfg: SimConfig, technique: Technique | None = None,
+                 scheduler: Scheduler | None = None):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.cluster = Cluster(cfg, self.rng)
+        self.workload = WorkloadGenerator(cfg, self.rng)
+        self.faults = FaultInjector(cfg, self.rng)
+        self.scheduler = scheduler or UtilizationAwareScheduler()
+        self.technique = technique or NoMitigation()
+        self.technique.bind(self)
+        self.tasks = TaskTable()
+        self.log = M.MetricsLog()
+        self.t = 0  # current interval index
+        self.job_tasks: dict[int, list[int]] = {}
+        self.job_deadline: dict[int, bool] = {}
+        self.jobs_done: set[int] = set()
+        self.straggler_ma = np.zeros(cfg.n_hosts)
+        self.host_straggler_counts = np.zeros(cfg.n_hosts)
+        # per completed job: (finish interval, task times, straggler flags,
+        # hosts) for ground-truth accounting
+        self.completed_jobs: list[dict] = []
+        self._interval_straggler_done: list[int] = []
+        self.util_history: list[np.ndarray] = []  # (n_hosts, 4) per interval
+
+    # ------------------------------ helpers -------------------------------
+
+    @property
+    def now_s(self) -> float:
+        return self.t * self.cfg.interval_seconds
+
+    def active_jobs(self) -> list[int]:
+        return [j for j, tids in self.job_tasks.items()
+                if j not in self.jobs_done
+                and any(self.tasks.state[i] in (PENDING, RUNNING)
+                        for i in tids)]
+
+    def job_incomplete_tasks(self, job: int) -> list[int]:
+        return [i for i in self.job_tasks[job]
+                if self.tasks.state[i] in (PENDING, RUNNING)]
+
+    def _place(self, i: int, forced: int | None = None) -> None:
+        """Place task i (VM-creation faults bounce to rescheduling)."""
+        tt = self.tasks
+        host = forced if forced is not None else self.scheduler.place(
+            self.cluster, tt.req[i], self.rng,
+            exclude=int(tt.prev_host[i]) if tt.prev_host[i] >= 0 else None)
+        if self.cluster.downtime[host] > 0:
+            host = self.scheduler.place(self.cluster, tt.req[i], self.rng)
+        tt.host[i] = host
+        tt.state[i] = RUNNING
+        if tt.start_s[i] == 0.0:
+            tt.start_s[i] = self.now_s
+
+    # ---------------------------- main stepping ----------------------------
+
+    def step(self) -> None:
+        cfg, tt = self.cfg, self.tasks
+        self.cluster.begin_interval()
+        self._interval_straggler_done = []
+
+        # 1. arrivals
+        batch = self.workload.sample_interval(self.t)
+        new_idx = []
+        for j in range(len(batch.job_ids)):
+            i = tt.add(job_id=batch.job_ids[j], state=PENDING,
+                       work=batch.work[j], submit_s=self.now_s,
+                       deadline_s=batch.deadline_rel[j],
+                       is_deadline=batch.is_deadline[j],
+                       sla_weight=batch.sla_weight[j])
+            tt.req[i] = batch.req[j]
+            jid = int(batch.job_ids[j])
+            self.job_tasks.setdefault(jid, []).append(i)
+            self.job_deadline[jid] = bool(batch.is_deadline[j])
+            new_idx.append(i)
+        new_idx = np.array(new_idx, np.int64)
+
+        # 2. technique submission hook (clone / delay)
+        t0 = _time.perf_counter()
+        for act in self.technique.on_submit(new_idx):
+            self._apply(act)
+        submit_overhead = _time.perf_counter() - t0
+
+        # 3. schedule pending tasks whose delay has expired
+        events = self.faults.interval_events()
+        vm_fault_hosts = {e.host for e in events
+                          if e.kind == FaultKind.VM_CREATION}
+        for i in np.nonzero(tt.view("state") == PENDING)[0]:
+            if tt.delayed_until[i] > self.t:
+                continue
+            self._place(int(i))
+            if int(tt.host[i]) in vm_fault_hosts:   # VM creation fault:
+                tt.state[i] = PENDING               # bounce to next interval
+                tt.restarts[i] += 1
+
+        # 4. fault events
+        for ev in events:
+            if ev.kind == FaultKind.HOST:
+                self.cluster.fail_host(ev.host, ev.downtime)
+                resident = np.nonzero((tt.view("state") == RUNNING)
+                                      & (tt.view("host") == ev.host))[0]
+                for i in resident:
+                    self._restart(int(i))
+        active = tt.active_mask()
+        cl_faults = self.faults.cloudlet_faults(int(active.sum()))
+        for i, f in zip(np.nonzero(active)[0], cl_faults):
+            if f:
+                self._restart(int(i))
+
+        # 5. technique interval hook (speculate / rerun)
+        t0 = _time.perf_counter()
+        for act in self.technique.on_interval():
+            self._apply(act)
+        predicted = self.technique.predicted_straggler_count()
+        interval_overhead = _time.perf_counter() - t0 + submit_overhead
+
+        # 6. progress
+        active = tt.active_mask()
+        self.cluster.recompute_utilization(tt.view("req")[:, :],
+                                           tt.view("host"), active)
+        rate = self.cluster.effective_speed() * cfg.host_ips  # MI/s per host
+        run = np.nonzero(active)[0]
+        inc = rate[tt.host[run]] * cfg.interval_seconds
+        prog0 = tt.progress[run]
+        tt.progress[run] = prog0 + inc
+        finished = tt.progress[run] >= tt.work[run]
+        for i, fin, p0, dinc in zip(run, finished, prog0, inc):
+            if fin:
+                frac = np.clip((tt.work[i] - p0) / max(dinc, 1e-9), 0, 1)
+                self._complete(int(i), self.now_s
+                               + frac * cfg.interval_seconds)
+
+        self.util_history.append(self.cluster.util.copy())
+
+        # 7. metrics + ground-truth straggler accounting
+        cont = M.contention_metric(self.cluster, tt.view("req"),
+                                   tt.view("host"), tt.active_mask())
+        self.log.record_interval(self.cluster, cont,
+                                 int(tt.active_mask().sum()), predicted,
+                                 interval_overhead)
+        self._update_job_completion()
+        self.t += 1
+
+    def run(self) -> dict:
+        for _ in range(self.cfg.n_intervals):
+            self.step()
+        return self.summary()
+
+    def summary(self) -> dict:
+        s = M.summarize(self.log, self.tasks, self.cfg.interval_seconds,
+                        self.cfg.restart_overhead_s)
+        s["technique"] = self.technique.name
+        s["jobs_done"] = len(self.jobs_done)
+        return s
+
+    # ------------------------------ actions -------------------------------
+
+    def _apply(self, act: SimAction) -> None:
+        tt = self.tasks
+        i = act.task
+        if tt.state[i] not in (PENDING, RUNNING):
+            return
+        if act.kind == "delay":
+            if tt.state[i] == PENDING:
+                tt.delayed_until[i] = self.t + act.delay
+        elif act.kind == "rerun":
+            self._restart(i, target=act.target)
+        elif act.kind in ("speculate", "clone"):
+            for c in range(act.n_clones if act.kind == "clone" else 1):
+                j = tt.add(job_id=tt.job_id[i], state=PENDING,
+                           work=tt.work[i], submit_s=self.now_s,
+                           deadline_s=tt.deadline_s[i],
+                           is_deadline=tt.is_deadline[i],
+                           sla_weight=tt.sla_weight[i], is_copy=True,
+                           orig=i)
+                tt.req[j] = tt.req[i]
+                self._place(j, forced=act.target)
+
+    def _restart(self, i: int, target: int | None = None) -> None:
+        tt = self.tasks
+        tt.progress[i] = 0.0
+        tt.restarts[i] += 1
+        tt.prev_host[i] = tt.host[i]
+        if target is not None:
+            self._place(i, forced=target)
+        else:
+            tt.state[i] = PENDING
+            tt.host[i] = -1
+
+    def _complete(self, i: int, finish_s: float) -> None:
+        tt = self.tasks
+        tt.state[i] = DONE
+        tt.finish_s[i] = finish_s
+        # first-result-wins across {original, copies}
+        orig = int(tt.orig[i]) if tt.is_copy[i] else i
+        if tt.is_copy[i] and tt.state[orig] in (PENDING, RUNNING):
+            tt.state[orig] = DONE
+            tt.finish_s[orig] = finish_s
+        group = np.nonzero((tt.view("orig") == orig)
+                           & (tt.view("state") != DONE))[0]
+        for g in group:
+            tt.state[g] = CANCELLED
+
+    # ----------------------- job-level bookkeeping ------------------------
+
+    def _update_job_completion(self) -> None:
+        tt = self.tasks
+        k = self.cfg.k
+        counts = np.zeros(self.cfg.n_hosts)
+        for job in list(self.job_tasks):
+            if job in self.jobs_done:
+                continue
+            tids = self.job_tasks[job]
+            if any(tt.state[i] in (PENDING, RUNNING) for i in tids):
+                continue
+            times = np.array([max(tt.finish_s[i] - tt.submit_s[i], 1e-3)
+                              for i in tids])
+            hosts = np.array([tt.host[i] for i in tids])
+            a, b = pareto.fit_pareto(times)
+            thr = float(pareto.straggler_threshold(
+                np.asarray(a), np.asarray(b), k))
+            strag = times > thr
+            np.add.at(counts, hosts[strag], 1)
+            self.jobs_done.add(job)
+            self.completed_jobs.append(dict(
+                job=job, t=self.t, times=times, straggler=strag,
+                hosts=hosts, deadline=self.job_deadline[job]))
+        decay = 0.8
+        self.straggler_ma = decay * self.straggler_ma + (1 - decay) * counts
+        self.host_straggler_counts += counts
+
+    # ------------------ post-hoc per-interval actuals (MAPE) ---------------
+
+    def actual_stragglers_per_interval(self) -> np.ndarray:
+        """actual_t = number of straggler tasks active at interval t.
+
+        Computable only post-hoc (a task is a straggler relative to its
+        job's fitted Pareto threshold once the job completes).
+        """
+        out = np.zeros(self.t)
+        dt = self.cfg.interval_seconds
+        tt = self.tasks
+        for rec in self.completed_jobs:
+            tids = self.job_tasks[rec["job"]]
+            for i, is_s in zip(tids, rec["straggler"]):
+                if not is_s:
+                    continue
+                lo = int(tt.submit_s[i] // dt)
+                hi = int(max(tt.finish_s[i], tt.submit_s[i]) // dt)
+                out[lo:min(hi + 1, self.t)] += 1
+        return out

@@ -1,0 +1,56 @@
+"""VM/task scheduling policies (paper §4.5).
+
+The paper uses A3C-R2N2 (an RL policy) as the *common* scheduler beneath all
+straggler techniques; since the scheduler is shared, any fixed policy
+preserves the technique comparison. We provide a deterministic
+utilization-aware scorer (stand-in, see DESIGN.md deviations) and the random
+scheduler the paper uses to generate diverse training data (§4.4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.cluster import Cluster
+
+
+class Scheduler:
+    name = "base"
+
+    def place(self, cluster: Cluster, req: np.ndarray,
+              rng: np.random.Generator,
+              exclude: int | None = None) -> int:
+        raise NotImplementedError
+
+
+class UtilizationAwareScheduler(Scheduler):
+    """Least projected-load placement with task-count tie-break."""
+
+    name = "util-aware"
+
+    def place(self, cluster, req, rng, exclude=None):
+        online = cluster.online()
+        if exclude is not None and online.sum() > 1:
+            online = online.copy()
+            online[exclude] = False
+        proj = cluster.util + req[None, :]
+        score = proj.max(axis=1) + 0.05 * cluster.n_tasks \
+            - 0.1 * cluster.speed
+        score = np.where(online, score, np.inf)
+        best = int(np.argmin(score))
+        return best
+
+
+class RandomScheduler(Scheduler):
+    """Uniform-random placement over online hosts (training-data generator,
+    paper §4.4: 'a scheduler that selects tasks at random and schedules them
+    randomly to any host using a uniform distribution')."""
+
+    name = "random"
+
+    def place(self, cluster, req, rng, exclude=None):
+        online = np.nonzero(cluster.online())[0]
+        if exclude is not None and len(online) > 1:
+            online = online[online != exclude]
+        if len(online) == 0:
+            return int(rng.integers(0, cluster.n))
+        return int(rng.choice(online))

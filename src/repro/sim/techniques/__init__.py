@@ -1,0 +1,28 @@
+"""Straggler techniques: START + the paper's six baselines (+ RPPS)."""
+from repro.sim.engine import NoMitigation
+from repro.sim.techniques.baselines import (GRASS, SGC, Dolly, IGRUSD,
+                                            NearestFit, Wrangler)
+from repro.sim.techniques.rpps import RPPS
+from repro.sim.techniques.start_tech import START
+
+REGISTRY = {
+    "none": NoMitigation,
+    "start": START,
+    "igru-sd": IGRUSD,
+    "sgc": SGC,
+    "dolly": Dolly,
+    "grass": GRASS,
+    "nearestfit": NearestFit,
+    "wrangler": Wrangler,
+    "rpps": RPPS,
+}
+
+BASELINES = ["nearestfit", "dolly", "grass", "sgc", "wrangler", "igru-sd"]
+
+
+def make(name: str, **kw):
+    return REGISTRY[name](**kw)
+
+__all__ = ["REGISTRY", "BASELINES", "make", "START", "IGRUSD", "SGC",
+           "Dolly", "GRASS", "NearestFit", "Wrangler", "RPPS",
+           "NoMitigation"]

@@ -1,0 +1,413 @@
+"""The paper's six baseline techniques (§4.6), implemented per their source
+papers' core rules, sharing the engine's action vocabulary.
+
+  NearestFit [6]  — online curve-fit progress profiling -> reactive speculation
+  Dolly [20]      — budgeted proactive cloning of small jobs (UCB-gated)
+  GRASS [8]       — greedy resource-aware reactive speculation
+  SGC [9]         — pair-wise balanced upfront redundancy
+  Wrangler [17]   — learned linear straggler probability -> delayed start
+  IGRU-SD [22]    — GRU resource/latency prediction -> proactive mitigation
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder_lstm as nets
+from repro.sim import engine as E
+
+MIN_OBS_INTERVALS = 2  # reactive methods need some progress history
+
+
+def _expected_time(sim, i) -> float:
+    return float(sim.tasks.work[i] / sim.cfg.host_ips)
+
+
+def _elapsed(sim, i) -> float:
+    return sim.now_s - float(sim.tasks.start_s[i])
+
+
+def _remaining_estimate(sim, i) -> float:
+    """Remaining seconds at the task's observed progress rate."""
+    tt = sim.tasks
+    el = max(_elapsed(sim, i), 1.0)
+    rate = float(tt.progress[i]) / el
+    rem = float(tt.work[i] - tt.progress[i])
+    return rem / max(rate, 1e-6)
+
+
+def _pick_fast_host(sim, exclude: int) -> int:
+    c = sim.cluster
+    score = np.where(c.online(), c.util[:, 0] - 0.2 * c.speed, np.inf)
+    if 0 <= exclude < len(score):
+        score[exclude] = np.inf
+    return int(np.argmin(score))
+
+
+class NearestFit(E.Technique):
+    """Fits t = a + b*x^c on completed (work -> time) pairs; running tasks
+    whose elapsed time exceeds 1.5x the fit are stragglers -> speculate."""
+
+    name = "nearestfit"
+
+    def __init__(self):
+        self.obs_x: list[float] = []
+        self.obs_t: list[float] = []
+        self.coef = None
+        self._flagged: set[int] = set()
+
+    def _fit(self):
+        if len(self.obs_x) < 8:
+            return
+        x = np.array(self.obs_x)
+        t = np.maximum(np.array(self.obs_t), 1e-3)
+        # log t = log b + c log x (a ~= 0 for compute-bound tasks)
+        A = np.stack([np.ones_like(x), np.log(x)], 1)
+        sol, *_ = np.linalg.lstsq(A, np.log(t), rcond=None)
+        self.coef = sol
+
+    def _predict(self, work: float) -> float:
+        if self.coef is None:
+            return work / self.sim.cfg.host_ips
+        return float(np.exp(self.coef[0] + self.coef[1] * np.log(work)))
+
+    def on_interval(self):
+        sim = self.sim
+        tt = sim.tasks
+        done = np.nonzero((tt.view("state") == E.DONE)
+                          & ~tt.view("is_copy"))[0]
+        self.obs_x = [float(tt.work[i]) for i in done][-512:]
+        self.obs_t = [float(tt.finish_s[i] - tt.start_s[i])
+                      for i in done][-512:]
+        self._fit()
+        acts = []
+        cap = max(1, int(0.02 * tt.active_mask().sum()))
+        for i in np.nonzero(tt.active_mask())[0]:
+            i = int(i)
+            if len(acts) >= cap:
+                break
+            if i in self._flagged:
+                continue
+            if _elapsed(sim, i) < MIN_OBS_INTERVALS * sim.cfg.interval_seconds:
+                continue
+            if _elapsed(sim, i) > 1.5 * self._predict(float(tt.work[i])):
+                self._flagged.add(i)
+                acts.append(E.SimAction(
+                    "speculate", i, target=_pick_fast_host(
+                        sim, int(tt.host[i]))))
+        return acts
+
+
+class Dolly(E.Technique):
+    """Proactive cloning of small jobs within a 5% resource budget, gated by
+    an upper-confidence-bound on cluster CPU utilization [20]."""
+
+    name = "dolly"
+
+    def __init__(self, budget: float = 0.05, small_job: int = 3):
+        self.budget = budget
+        self.small_job = small_job
+        self.cloned = 0
+
+    def on_submit(self, new_idx):
+        sim = self.sim
+        tt = sim.tasks
+        total = max(int((~tt.view("is_copy")).sum()), 1)
+        util = sim.cluster.util[:, 0]
+        mean, std = float(util.mean()), float(util.std())
+        ucb = mean + 1.0 * std
+        acts = []
+        jobs: dict[int, list[int]] = {}
+        for i in new_idx:
+            jobs.setdefault(int(tt.job_id[i]), []).append(int(i))
+        for job, tids in jobs.items():
+            if len(tids) > self.small_job or ucb > 0.8:
+                continue
+            if (self.cloned + len(tids)) / total > self.budget:
+                break
+            for i in tids:
+                acts.append(E.SimAction("clone", i, n_clones=1))
+                self.cloned += 1
+        return acts
+
+
+class GRASS(E.Technique):
+    """Greedy speculation: clone the running tasks with the largest
+    (current-remaining - fresh-rerun) gain while spare capacity exists [8]."""
+
+    name = "grass"
+
+    def __init__(self, max_spec_frac: float = 0.05):
+        self.max_spec_frac = max_spec_frac
+        self._flagged: set[int] = set()
+
+    def on_interval(self):
+        sim = self.sim
+        tt = sim.tasks
+        spare = float(np.mean(np.clip(1.0 - sim.cluster.util[:, 0], 0, 1)))
+        budget = max(1, int(spare * sim.cfg.n_hosts
+                            * self.max_spec_frac * 0.5))
+        cands = []
+        for i in np.nonzero(tt.active_mask())[0]:
+            i = int(i)
+            if i in self._flagged:
+                continue
+            if _elapsed(sim, i) < MIN_OBS_INTERVALS * sim.cfg.interval_seconds:
+                continue
+            gain = _remaining_estimate(sim, i) - _expected_time(sim, i)
+            if gain > 2.0 * sim.cfg.interval_seconds:
+                cands.append((gain, i))
+        cands.sort(reverse=True)
+        acts = []
+        for _, i in cands[:budget]:
+            self._flagged.add(i)
+            acts.append(E.SimAction("speculate", i,
+                                    target=_pick_fast_host(
+                                        sim, int(tt.host[i]))))
+        return acts
+
+
+class SGC(E.Technique):
+    """Pair-wise balanced upfront redundancy: each task is duplicated onto
+    its paired host with probability p (approximate gradient coding) [9]."""
+
+    name = "sgc"
+
+    def __init__(self, p: float = 0.15):
+        self.p = p
+
+    def on_submit(self, new_idx):
+        sim = self.sim
+        acts = []
+        n = sim.cfg.n_hosts
+        for i in new_idx:
+            if sim.rng.random() < self.p:
+                pair = (int(i) + n // 2) % n
+                acts.append(E.SimAction("clone", int(i), target=pair,
+                                        n_clones=1))
+        return acts
+
+
+class Wrangler(E.Technique):
+    """Linear straggler-probability model on host utilization counters with
+    a confidence threshold; predicted-unsafe placements are delayed [17]."""
+
+    name = "wrangler"
+
+    def __init__(self, threshold: float = 0.7, max_delay: int = 3):
+        self.threshold = threshold
+        self.max_delay = max_delay
+        self.w = None           # ridge weights, set by pretraining
+        self._delays: dict[int, int] = {}
+
+    def train(self, feats: np.ndarray, labels: np.ndarray,
+              l2: float = 1e-2):
+        A = np.concatenate([feats, np.ones((len(feats), 1))], 1)
+        self.w = np.linalg.solve(A.T @ A + l2 * np.eye(A.shape[1]),
+                                 A.T @ labels)
+
+    def _prob(self, hosts_feats: np.ndarray) -> np.ndarray:
+        if self.w is None:
+            return np.zeros(len(hosts_feats))
+        A = np.concatenate([hosts_feats,
+                            np.ones((len(hosts_feats), 1))], 1)
+        return np.clip(A @ self.w, 0, 1)
+
+    def _host_feats(self) -> np.ndarray:
+        c = self.sim.cluster
+        return np.concatenate(
+            [c.util, c.speed[:, None] / c.speed.max()], 1)
+
+    def on_submit(self, new_idx):
+        return self._maybe_delay(new_idx)
+
+    def on_interval(self):
+        tt = self.sim.tasks
+        pend = np.nonzero(tt.view("state") == E.PENDING)[0]
+        return self._maybe_delay(pend)
+
+    def _maybe_delay(self, idx):
+        if self.w is None or len(idx) == 0:
+            return []
+        probs = self._prob(self._host_feats())
+        online = self.sim.cluster.online()
+        safe_exists = bool((probs[online] < self.threshold).any()) \
+            if online.any() else False
+        acts = []
+        for i in idx:
+            i = int(i)
+            if safe_exists:
+                continue  # scheduler will find a safe host
+            d = self._delays.get(i, 0)
+            if d < self.max_delay:
+                self._delays[i] = d + 1
+                acts.append(E.SimAction("delay", i, delay=1))
+        return acts
+
+
+# ------------------------------ IGRU-SD -----------------------------------
+
+
+def gru_init(key, n_in: int, hidden: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(n_in)
+    sh = 1.0 / np.sqrt(hidden)
+    return {
+        "wx": jax.random.normal(k1, (n_in, 3 * hidden)) * s,
+        "wh": jax.random.normal(k2, (hidden, 3 * hidden)) * sh,
+        "b": jnp.zeros((3 * hidden,)),
+        "head": {"w": jax.random.normal(k3, (hidden, 1)) * sh,
+                 "b": jnp.zeros((1,))},
+    }
+
+
+def gru_apply(params, xs):
+    """xs: (T, B, n_in) -> (B,) predicted normalized completion time."""
+    hidden = params["wh"].shape[0]
+
+    def cell(h, x):
+        z = x @ params["wx"] + h @ params["wh"] + params["b"]
+        r, u, n = jnp.split(z, 3, -1)
+        r, u = jax.nn.sigmoid(r), jax.nn.sigmoid(u)
+        n = jnp.tanh(x @ params["wx"][:, 2 * hidden:]
+                     + r * (h @ params["wh"][:, 2 * hidden:]))
+        h = (1 - u) * n + u * h
+        return h, None
+
+    h0 = jnp.zeros((xs.shape[1], hidden))
+    h, _ = jax.lax.scan(cell, h0, xs)
+    out = h @ params["head"]["w"] + params["head"]["b"]
+    return jax.nn.softplus(out[..., 0])
+
+
+@jax.jit
+def _gru_loss(params, xs, y):
+    return jnp.mean((gru_apply(params, xs) - y) ** 2)
+
+
+@jax.jit
+def _gru_step(params, opt, xs, y):
+    loss, g = jax.value_and_grad(_gru_loss)(params, xs, y)
+    params, opt = nets.adam_update(params, g, opt, lr=1e-2)
+    return params, opt, loss
+
+
+class IGRUSD(E.Technique):
+    """GRU-based resource/latency prediction + detection threshold, with the
+    same speculate/rerun mitigation as START (paper §4.6 fairness note).
+
+    Deliberately ignores host heterogeneity (the paper's criticism): its
+    features are task-progress only, no host capability terms.
+    """
+
+    name = "igru-sd"
+
+    HIST = 5
+    FEATS = 3  # progress fraction, rate, elapsed/expected
+
+    def __init__(self, seed: int = 0):
+        self.params = gru_init(jax.random.PRNGKey(seed), self.FEATS, 16)
+        self.hist: dict[int, list[np.ndarray]] = {}
+        self._flagged: set[int] = set()
+        self._last_pred: float | None = None
+
+    def train(self, xs: np.ndarray, y: np.ndarray, epochs: int = 200):
+        opt = nets.adam_init(self.params)
+        for _ in range(epochs):
+            self.params, opt, _ = _gru_step(
+                self.params, opt, jnp.asarray(xs), jnp.asarray(y))
+
+    def _task_feats(self, i: int) -> np.ndarray:
+        sim = self.sim
+        tt = sim.tasks
+        el = max(_elapsed(sim, i), 1.0)
+        exp = max(_expected_time(sim, i), 1.0)
+        return np.array([
+            float(tt.progress[i] / max(tt.work[i], 1e-9)),
+            float(tt.progress[i] / el / sim.cfg.host_ips),
+            float(el / exp)], np.float32)
+
+    def on_interval(self):
+        sim = self.sim
+        tt = sim.tasks
+        run = [int(i) for i in np.nonzero(tt.active_mask())[0]]
+        for i in run:
+            self.hist.setdefault(i, []).append(self._task_feats(i))
+        ready = [i for i in run if len(self.hist.get(i, [])) >= self.HIST
+                 and i not in self._flagged]
+        self._last_pred = 0.0
+        if not ready:
+            return []
+        xs = np.stack([np.stack(self.hist[i][-self.HIST:]) for i in ready],
+                      axis=1)
+        # pad the job axis to a power of two: one jit compile per bucket
+        n = xs.shape[1]
+        pad = max(1 << (n - 1).bit_length(), 1) - n
+        if pad:
+            xs = np.concatenate(
+                [xs, np.zeros((xs.shape[0], pad, xs.shape[2]),
+                              xs.dtype)], axis=1)
+        preds = np.asarray(gru_apply(self.params, jnp.asarray(xs)))[:n]
+        acts = []
+        n_strag = 0.0
+        cap = max(1, int(0.02 * len(run)))
+        for i, p in zip(ready, preds):
+            exp = _expected_time(sim, i)
+            n_strag += float(p * exp > 1.5 * exp)
+            if p > 1.5 and _elapsed(sim, i) > exp and len(acts) < cap:
+                self._flagged.add(i)
+                kind = "speculate" if tt.is_deadline[i] else "rerun"
+                acts.append(E.SimAction(kind, i, target=_pick_fast_host(
+                    sim, int(tt.host[i]))))
+        self._last_pred = n_strag
+        return acts
+
+    def predicted_straggler_count(self):
+        return self._last_pred
+
+
+def pretrain_igru(tech: IGRUSD, sim_done: E.Simulation,
+                  epochs: int = 200) -> None:
+    """Train the GRU on (progress-history -> completion/expected ratio) pairs
+    from a finished warmup simulation."""
+    tt = sim_done.tasks
+    xs, ys = [], []
+    done = np.nonzero((tt.view("state") == E.DONE)
+                      & ~tt.view("is_copy"))[0]
+    for i in done:
+        i = int(i)
+        total = float(tt.finish_s[i] - tt.start_s[i])
+        exp = float(tt.work[i] / sim_done.cfg.host_ips)
+        # reconstruct an idealized progress history at the observed rate
+        frac = np.linspace(0.15, 0.75, IGRUSD.HIST)
+        rate = float(tt.work[i]) / max(total, 1.0) / sim_done.cfg.host_ips
+        el = frac * total
+        feats = np.stack([frac, np.full_like(frac, rate), el / exp], 1)
+        xs.append(feats)
+        ys.append(total / exp)
+    if not xs:
+        return
+    tech.train(np.stack(xs, axis=1).astype(np.float32),
+               np.array(ys, np.float32), epochs=epochs)
+
+
+def pretrain_wrangler(tech: Wrangler, sim_done: E.Simulation) -> None:
+    """Train Wrangler's linear model on (host utilization counters at job
+    completion -> was-straggler) pairs from a warmup simulation [17]."""
+    feats, labels = [], []
+    c = sim_done.cluster
+    speed_n = c.speed / c.speed.max()
+    hist = sim_done.util_history
+    for rec in sim_done.completed_jobs:
+        t = min(rec["t"] - 1, len(hist) - 1)
+        if t < 0:
+            continue
+        util = hist[t]
+        for h, s in zip(rec["hosts"], rec["straggler"]):
+            feats.append(np.concatenate([util[int(h)],
+                                         [speed_n[int(h)]]]))
+            labels.append(float(s))
+    if feats:
+        tech.train(np.array(feats), np.array(labels))

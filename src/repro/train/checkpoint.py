@@ -1,0 +1,132 @@
+"""Distributed checkpointing: save/restore param+optimizer pytrees.
+
+Design for 1000+ nodes (DESIGN.md §3):
+  * per-leaf .npy shards under step directories, manifest.json index;
+  * writes go to a staging dir then atomic-rename (a torn checkpoint can
+    never be loaded);
+  * async: a background thread drains a queue of (step, host-copied trees),
+    so the training loop blocks only for device->host copy;
+  * retention: keep the last ``keep`` steps;
+  * restore places leaves onto the current mesh via device_put with the
+    caller's shardings — this is the re-shard path used by elastic scaling
+    (checkpoint written on N hosts, restored on M).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree, keep: int = 3) -> str:
+    """Synchronous save. Returns the final step directory."""
+    os.makedirs(path, exist_ok=True)
+    stage = os.path.join(path, f".tmp-{step}")
+    final = os.path.join(path, f"step_{step:08d}")
+    if os.path.exists(stage):
+        shutil.rmtree(stage)
+    os.makedirs(stage)
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef), "dtypes": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["dtypes"].append(str(arr.dtype))
+        if arr.dtype.name == "bfloat16":  # npy can't store ml_dtypes
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(stage, f"leaf_{i:05d}.npy"), arr,
+                allow_pickle=False)
+    with open(os.path.join(stage, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(stage, final)
+    _retain(path, keep)
+    return final
+
+
+def _retain(path: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, d))
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    if not steps:
+        return None
+    return int(steps[-1].split("_")[1])
+
+
+def restore(path: str, step: int, like_tree, shardings=None):
+    """Load a checkpoint into the structure of ``like_tree``; if
+    ``shardings`` (same pytree of NamedSharding) is given, leaves are
+    device_put onto the current mesh — the elastic re-shard path."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like_tree)
+    assert manifest["n_leaves"] == len(leaves), \
+        (manifest["n_leaves"], len(leaves))
+    import ml_dtypes
+    out = []
+    dtypes = manifest.get("dtypes", [None] * len(leaves))
+    for i, like in enumerate(leaves):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"),
+                      allow_pickle=False)
+        if dtypes[i] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Background-thread writer; the step loop only pays device->host."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Exception | None = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.path, step, tree, keep=self.keep)
+            except Exception as e:  # surfaced on next submit/close
+                self._err = e
+
+    def submit(self, step: int, tree) -> None:
+        if self._err:
+            raise self._err
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree))
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._t.join()
+        if self._err:
+            raise self._err

@@ -1,0 +1,58 @@
+"""Deterministic synthetic LM data pipeline.
+
+Tokens follow a noisy affine recurrence t_{i+1} = (a*t_i + b) mod V with
+epsilon-uniform corruption — structured enough that a model visibly learns
+(loss drops well below log V), fully deterministic per (seed, step, shard),
+and generable on every host independently (no host-to-host data traffic:
+each data shard derives its slice from its shard index, the standard
+trick for synthetic scale tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+    a: int = 31
+    b: int = 7
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, shard_index: int = 0,
+                 shard_count: int = 1):
+        assert cfg.global_batch % shard_count == 0
+        self.cfg = cfg
+        self.shard_index = shard_index
+        self.shard_count = shard_count
+        self.local_batch = cfg.global_batch // shard_count
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed, step, self.shard_index))
+        b, s = self.local_batch, cfg.seq_len
+        toks = np.empty((b, s + 1), np.int64)
+        toks[:, 0] = rng.integers(0, cfg.vocab, b)
+        noise = rng.random((b, s)) < cfg.noise
+        rand = rng.integers(0, cfg.vocab, (b, s))
+        for i in range(s):
+            nxt = (cfg.a * toks[:, i] + cfg.b) % cfg.vocab
+            toks[:, i + 1] = np.where(noise[:, i], rand[:, i], nxt)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+
+    def batches(self, start: int, n: int):
+        for step in range(start, start + n):
+            yield self.batch(step)

@@ -1,0 +1,175 @@
+"""Optimizers: AdamW (fp32 moments) and a factored-second-moment variant
+("adafactor" mode) for the 398B/671B configs where full Adam state cannot
+fit a single pod. Pure pytree functions; state sharding mirrors params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # adafactor mode uses bf16 first moment
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any            # first moment (adamw + adafactor)
+    v: Any            # second moment (adamw) | None
+    v_row: Any        # factored second moment (adafactor) | None
+    v_col: Any
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init(cfg: OptConfig, params: Any) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    if cfg.kind == "adamw":
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, mdt), params)
+        return OptState(jnp.zeros((), jnp.int32), z,
+                        jax.tree_util.tree_map(
+                            lambda p: jnp.zeros(p.shape, mdt), params),
+                        None, None)
+    # adafactor: bf16 m; factored fp32 v for matrices, full fp32 for vectors
+    m = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    v_row = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+        if _factored(p.shape) else jnp.zeros((1,), jnp.float32), params)
+    v_col = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        if _factored(p.shape) else jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), m, None, v_row, v_col)
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def update(cfg: OptConfig, grads: Any, state: OptState, params: Any
+           ) -> tuple[Any, OptState, dict]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads)
+    tf = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** tf
+    bc2 = 1 - cfg.b2 ** tf
+
+    if cfg.kind == "adamw":
+        m = jax.tree_util.tree_map(
+            lambda m_, g: (cfg.b1 * m_.astype(jnp.float32)
+                           + (1 - cfg.b1) * g).astype(m_.dtype),
+            state.m, grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: (cfg.b2 * v_.astype(jnp.float32)
+                           + (1 - cfg.b2) * g * g).astype(v_.dtype),
+            state.v, grads)
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        new_state = OptState(step, m, v, None, None)
+    else:  # adafactor-style
+        m = jax.tree_util.tree_map(
+            lambda m_, g: (cfg.b1 * m_.astype(jnp.float32)
+                           + (1 - cfg.b1) * g).astype(jnp.bfloat16),
+            state.m, grads)
+
+        def vrow_up(vr, g):
+            if _factored(g.shape):
+                return cfg.b2 * vr + (1 - cfg.b2) * jnp.mean(g * g, -1)
+            return vr
+
+        def vcol_up(vc, g):
+            if _factored(g.shape):
+                return cfg.b2 * vc + (1 - cfg.b2) * jnp.mean(g * g, -2)
+            return cfg.b2 * vc + (1 - cfg.b2) * g * g
+
+        v_row = jax.tree_util.tree_map(vrow_up, state.v_row, grads)
+        v_col = jax.tree_util.tree_map(vcol_up, state.v_col, grads)
+
+        def upd(p, m_, vr, vc, g):
+            if _factored(g.shape):
+                r = vr / bc2            # (..., rows)
+                c = vc / bc2            # (..., cols)
+                denom = jnp.sqrt(
+                    r[..., :, None] * c[..., None, :]
+                    / jnp.maximum(jnp.mean(r, -1, keepdims=True)
+                                  [..., None], 1e-30)) + cfg.eps
+            else:
+                denom = jnp.sqrt(vc / bc2) + cfg.eps
+            step_ = (m_.astype(jnp.float32) / bc1) / denom
+            if p.ndim >= 2:
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v_row, v_col,
+                                            grads)
+        new_state = OptState(step, m, None, v_row, v_col)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ------------------------- state sharding specs -----------------------------
+
+
+def opt_specs(cfg: OptConfig, param_spec_tree: Any, params_sds: Any
+              ) -> OptState:
+    """PartitionSpec pytree for the optimizer state: moments mirror the
+    param spec; factored vectors drop the corresponding dim."""
+    if cfg.kind == "adamw":
+        return OptState(P(), param_spec_tree, param_spec_tree, None, None)
+
+    def row_spec(spec, p):
+        if _factored(p.shape):
+            return P(*tuple(spec)[:-1]) if len(tuple(spec)) else P()
+        return P()
+
+    def col_spec(spec, p):
+        t = tuple(spec)
+        if _factored(p.shape):
+            return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P()
+        return spec
+
+    v_row = jax.tree_util.tree_map(row_spec, param_spec_tree, params_sds)
+    v_col = jax.tree_util.tree_map(col_spec, param_spec_tree, params_sds)
+    return OptState(P(), param_spec_tree, None, v_row, v_col)

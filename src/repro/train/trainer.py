@@ -1,0 +1,182 @@
+"""Training step construction: microbatched grad accumulation, sharded
+optimizer update, metrics — one jit-compiled function per (model, mesh).
+
+Memory shape: the scan over microbatches bounds live logits to one
+microbatch (essential for 200k+ vocab configs); gradients accumulate in
+fp32 (bf16 option for the 671B config). GSPMD inserts the FSDP
+all-gathers / reduce-scatters and the data-axis gradient reduction from
+the in_shardings alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as Sh
+from repro.models.lm import Model
+from repro.train import optimizer as Opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_micro: int = 1
+    accum_dtype: str = "float32"   # bf16 for the 671B config
+    remat: bool = True             # layer remat lives in the model scan
+
+
+def auto_n_micro(global_batch: int, seq: int, vocab: int, n_data: int,
+                 n_model: int = 1, n_layers: int = 32,
+                 d_model: int = 4096,
+                 budget_bytes: float = 4e9) -> int:
+    """Smallest microbatch count whose per-device live memory fits.
+
+    Memory model per device per microbatch:
+      logits  = tokens_loc * (vocab / n_model) * 6  (f32 logits + bf16
+                one-hot; vocab is TP-sharded since iteration 0c)
+      remat   = n_layers * tokens_loc * d_model * 2 (scan carries)
+    Fewer microbatches = fewer FSDP weight regathers (iteration 1), so we
+    take the SMALLEST feasible n.
+
+    Hard cap: each microbatch must still cover every data shard
+    (global_batch/n >= n_data), otherwise GSPMD replicates the batch and
+    every device silently computes the whole microbatch (measured 3.5x
+    per-device FLOPs — see EXPERIMENTS.md §Perf iteration 0)."""
+    cap = max(global_batch // max(n_data, 1), 1)
+    n = 1
+    while n < cap:
+        tokens_loc = global_batch * seq / max(n_data, 1) / n
+        logits = tokens_loc * (vocab / max(n_model, 1)) * 6
+        remat = n_layers * tokens_loc * d_model * 2
+        if logits + remat <= budget_bytes:
+            break
+        n *= 2
+    return min(n, cap)
+
+
+def make_train_step(model: Model, opt_cfg: Opt.OptConfig,
+                    tcfg: TrainConfig = TrainConfig(), mesh=None,
+                    dp_axes: tuple | None = None, grad_specs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Pure; jit/lower outside.
+
+    ``mesh``/``dp_axes``: microbatch slices are sharding-constrained to the
+    dp axes so the scan reshape can't lose the batch sharding.
+    ``grad_specs``: per-microbatch grads are constrained to the param
+    sharding, turning the gradient reduction into reduce-scatter instead
+    of all-reduce-then-slice (EXPERIMENTS.md §Perf iteration 3)."""
+    adt = jnp.dtype(tcfg.accum_dtype)
+    mb_sharding = None
+    if mesh is not None:
+        dp = dp_axes if dp_axes is not None else Sh.dp_axes(mesh)
+        mb_sharding = lambda x: NamedSharding(  # noqa: E731
+            mesh, P(dp, *([None] * (x.ndim - 1))))
+
+    def constrain_grads(g):
+        if grad_specs is None or mesh is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda x, sp: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, sp)), g, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        n_micro = tcfg.n_micro
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            def body(g_acc, mb):
+                if mb_sharding is not None:
+                    mb = jax.tree_util.tree_map(
+                        lambda x: jax.lax.with_sharding_constraint(
+                            x, mb_sharding(x)), mb)
+                loss, g = jax.value_and_grad(model.loss_fn)(params, mb)
+                g = constrain_grads(g)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(adt), g_acc, g)
+                return g_acc, loss
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            g_acc, losses = jax.lax.scan(body, g0, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, g_acc)
+            loss = losses.mean()
+
+        params, opt_state, om = Opt.update(opt_cfg, grads, opt_state,
+                                           params)
+        metrics = {"loss": loss.astype(jnp.float32), **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Binds a model to a mesh: sharded init, compiled step, checkpoint
+    hooks, and the straggler-runtime callback point."""
+
+    model: Model
+    mesh: Any
+    opt_cfg: Opt.OptConfig = Opt.OptConfig()
+    tcfg: TrainConfig = TrainConfig()
+    donate: bool = True
+
+    def __post_init__(self):
+        self.param_spec = None
+        self.step_fn = None
+
+    # -------- spec derivation (works from ShapeDtypeStructs, no alloc) -----
+
+    def specs(self, batch_like):
+        m = self.mesh
+        params_sds = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0)))
+        pspec = Sh.param_specs(params_sds, m)
+        ospec = Opt.opt_specs(self.opt_cfg, pspec, params_sds)
+        bspec = Sh.batch_specs_tree(batch_like, m)
+        return params_sds, pspec, ospec, bspec
+
+    def lower(self, batch_like):
+        """Lower (no compile) the train step for the given batch specs."""
+        params_sds, pspec, ospec, bspec = self.specs(batch_like)
+        opt_sds = jax.eval_shape(
+            functools.partial(Opt.init, self.opt_cfg), params_sds)
+        fn = make_train_step(self.model, self.opt_cfg, self.tcfg,
+                             mesh=self.mesh)
+        ns = lambda s: jax.tree_util.tree_map(  # noqa: E731
+            lambda sp: NamedSharding(self.mesh, sp), s,
+            is_leaf=lambda x: isinstance(x, P))
+        jfn = jax.jit(
+            fn,
+            in_shardings=(ns(pspec), ns(ospec), ns(bspec)),
+            out_shardings=(ns(pspec), ns(ospec), None),
+            donate_argnums=(0, 1) if self.donate else ())
+        return jfn.lower(params_sds, opt_sds, batch_like)
+
+    # ------------------------- concrete execution --------------------------
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt_state = Opt.init(self.opt_cfg, params)
+        if self.mesh is not None and len(self.mesh.devices.flatten()) > 1:
+            pspec = Sh.param_specs(params, self.mesh)
+            params = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(
+                    x, NamedSharding(self.mesh, s)), params, pspec)
+        return params, opt_state
+
+    def compile_step(self):
+        fn = make_train_step(self.model, self.opt_cfg, self.tcfg)
+        self.step_fn = jax.jit(fn, donate_argnums=(0, 1)
+                               if self.donate else ())
+        return self.step_fn

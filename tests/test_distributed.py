@@ -1,0 +1,257 @@
+"""Distributed runtime tests.
+
+Multi-device tests run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps exactly one device (per the dry-run isolation rule).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.distributed.straggler_runtime import (ActionKind, RuntimeConfig,
+                                                 StragglerRuntime,
+                                                 backup_mask)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ------------------------- straggler runtime (START) ------------------------
+
+
+def make_runtime(n=8, **kw):
+    return StragglerRuntime(RuntimeConfig(n_hosts=n, **kw))
+
+
+def test_runtime_no_actions_when_uniform():
+    rt = make_runtime()
+    for _ in range(6):
+        rt.observe_step(np.full(8, 1.0))
+    assert rt.decide() == []
+
+
+def test_runtime_backup_on_heavy_tail():
+    # E_S scales with host count (Eq. 4): use a pod-scale host set
+    rt = make_runtime(n=64)
+    rng = np.random.default_rng(0)
+    acted = False
+    for t in range(12):
+        times = 1.0 + 1.0 * rng.pareto(1.5, 64)  # heavy tail
+        times[3] *= 3.0                          # clear straggler
+        rt.observe_step(times)
+        for a in rt.decide():
+            acted = True
+            assert a.kind in (ActionKind.BACKUP_SHARD, ActionKind.EVICT)
+            if a.kind is ActionKind.BACKUP_SHARD:
+                assert a.backup != a.host
+    assert acted
+
+
+def test_runtime_evicts_chronic_straggler():
+    rt = make_runtime(evict_after=3)
+    rng = np.random.default_rng(1)
+    evicted = set()
+    for t in range(15):
+        times = 1.0 + 0.05 * rng.pareto(1.5, 8)
+        times[5] = 4.0  # chronically slow every step
+        rt.observe_step(times)
+        for a in rt.decide():
+            if a.kind is ActionKind.EVICT:
+                evicted.add(a.host)
+    assert 5 in evicted
+
+
+def test_backup_mask_exactly_one_contribution():
+    from repro.distributed.straggler_runtime import HostAction
+    actions = [HostAction(ActionKind.BACKUP_SHARD, 2, backup=0)]
+    # host 2 missed the deadline -> backup host 0 owns shard 2
+    w = backup_mask(4, actions, np.array([1, 1, 0, 1], bool))
+    np.testing.assert_array_equal(w, [1, 1, 0, 1])
+    # host 2 made it -> owner keeps the shard
+    w = backup_mask(4, actions, np.array([1, 1, 1, 1], bool))
+    np.testing.assert_array_equal(w, [1, 1, 1, 1])
+
+
+def test_runtime_es_tracks_tail_mass():
+    """Heavier tails -> larger expected straggler count (Eq. 4 behaviour)."""
+    rng = np.random.default_rng(2)
+    light = make_runtime()
+    heavy = make_runtime()
+    for _ in range(8):
+        light.observe_step(1.0 + 0.01 * rng.pareto(6.0, 8))
+        heavy.observe_step(1.0 + 1.0 * rng.pareto(1.2, 8))
+    assert heavy.expected_stragglers() > light.expected_stragglers()
+
+
+# ----------------------------- multi-device tests ---------------------------
+
+
+@pytest.mark.slow
+def test_sharded_training_8dev():
+    """FSDP+TP training on a (4,2) mesh: loss finite, params sharded."""
+    run_subprocess("""
+        import jax, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced
+        from repro.models.lm import Model, ShardCtx
+        from repro.distributed import sharding as Sh
+        from repro.launch.mesh import make_host_mesh
+        from repro.train.trainer import Trainer, TrainConfig
+        from repro.train.optimizer import OptConfig
+        from repro.train.data import SyntheticLM, DataConfig
+
+        assert len(jax.devices()) == 8
+        mesh = make_host_mesh(n_data=4, n_model=2)
+        cfg = get_reduced('demo-100m')
+        model = Model(cfg, shard_ctx=ShardCtx(mesh, Sh.dp_axes(mesh)))
+        tr = Trainer(model, mesh, opt_cfg=OptConfig(lr=1e-2,
+                     warmup_steps=2, total_steps=50))
+        params, opt = tr.init_state()
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=8))
+        import repro.train.optimizer as Opt
+        from repro.train.trainer import make_train_step
+        step = jax.jit(make_train_step(model, tr.opt_cfg, TrainConfig(),
+                                       mesh=mesh))
+        losses = []
+        for i in range(10):
+            params, opt, m = step(params, opt, data.batch(i))
+            losses.append(float(m['loss']))
+        assert all(np.isfinite(losses)), losses
+        assert losses[-1] < losses[0]
+        # at least one param leaf is actually sharded across devices
+        sharded = any(
+            not leaf.sharding.is_fully_replicated
+            for leaf in jax.tree_util.tree_leaves(params))
+        assert sharded
+        print('OK', losses[0], losses[-1])
+    """)
+
+
+@pytest.mark.slow
+def test_compression_ef_int8_8dev():
+    """EF-int8 all-reduce ~ plain mean; error feedback shrinks the bias."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed import compression as C
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(n_data=8, n_model=1)
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32))
+
+        def f(gl, res):
+            red, new_res = C.ef_int8_reduce({'w': gl[0]}, {'w': res[0]},
+                                            'data')
+            return red['w'][None], new_res['w'][None]
+
+        fn = shard_map(f, mesh=mesh,
+                       in_specs=(P('data', None, None),
+                                 P('data', None, None)),
+                       out_specs=(P('data', None, None),
+                                  P('data', None, None)))
+        res = jnp.zeros_like(g)
+        red, res = fn(g, res)
+        true_mean = g.mean(0)
+        got = np.asarray(red[0])
+        err = np.abs(got - np.asarray(true_mean)).max()
+        scale = float(np.abs(np.asarray(true_mean)).max())
+        assert err < 0.1 * scale + 0.05, (err, scale)
+        # residual carries the quantization error
+        assert float(jnp.abs(res).max()) > 0
+        print('OK', err)
+    """)
+
+
+@pytest.mark.slow
+def test_elastic_remesh_8dev():
+    """Drop 2 devices, rebuild the mesh, reshard params, keep training."""
+    run_subprocess("""
+        import jax, numpy as np
+        from repro.configs import get_reduced
+        from repro.models.lm import Model
+        from repro.distributed import elastic, sharding as Sh
+        from repro.launch.mesh import make_host_mesh
+        from repro.train.trainer import Trainer
+        from repro.train.optimizer import OptConfig
+        from repro.train.data import SyntheticLM, DataConfig
+
+        mesh = make_host_mesh(n_data=4, n_model=2)
+        cfg = get_reduced('demo-100m')
+        model = Model(cfg)
+        tr = Trainer(model, mesh, opt_cfg=OptConfig(lr=1e-2,
+                     warmup_steps=1, total_steps=50))
+        params, opt = tr.init_state()
+        st = elastic.ElasticState(mesh=mesh)
+        # hosts 6,7 fail (START eviction or hardware)
+        lost = [d.id for d in mesh.devices.flatten()[-2:]]
+        st2 = elastic.remesh(st, lost, model_parallel=2)
+        assert st2.mesh.shape['data'] == 3
+        params2 = elastic.reshard(params, mesh, st2.mesh,
+                                  lambda t, m: Sh.param_specs(t, m))
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=6))
+        from repro.train.trainer import make_train_step, TrainConfig
+        import repro.train.optimizer as Opt
+        opt2 = Opt.init(tr.opt_cfg, params2)
+        step = jax.jit(make_train_step(model, tr.opt_cfg, TrainConfig(),
+                                       mesh=st2.mesh))
+        p, o, m = step(params2, opt2, data.batch(0))
+        assert np.isfinite(float(m['loss']))
+        print('OK gen', st2.generation, float(m['loss']))
+    """)
+
+
+@pytest.mark.slow
+def test_checkpoint_cross_mesh_restore_8dev(tmp_path):
+    """Checkpoint written on a (4,2) mesh restores onto a (2,2) mesh."""
+    run_subprocess(f"""
+        import jax, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.configs import get_reduced
+        from repro.models.lm import Model
+        from repro.distributed import sharding as Sh
+        from repro.launch.mesh import make_host_mesh
+        from repro.train import checkpoint as ckpt
+
+        cfg = get_reduced('demo-100m')
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mesh1 = make_host_mesh(n_data=4, n_model=2)
+        s1 = Sh.param_specs(params, mesh1)
+        p1 = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh1, s)),
+            params, s1)
+        ckpt.save({str(tmp_path)!r}, 3, p1)
+        import jax.numpy as jnp
+        devs = np.array(jax.devices()[:4]).reshape(2, 2)
+        from jax.sharding import Mesh
+        mesh2 = Mesh(devs, ('data', 'model'))
+        s2 = Sh.param_specs(params, mesh2)
+        sh2 = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh2, s), s2,
+            is_leaf=lambda x: hasattr(x, '_normalized_spec') or
+            type(x).__name__ == 'PartitionSpec')
+        p2 = ckpt.restore({str(tmp_path)!r}, 3, params, shardings=sh2)
+        a = jax.tree_util.tree_leaves(p1)[0]
+        b = jax.tree_util.tree_leaves(p2)[0]
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+        print('OK')
+    """)

@@ -1,0 +1,119 @@
+"""Tests for the Encoder-LSTM network (paper §3.2) and its training loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoder_lstm as net
+from repro.core import features, pareto
+from repro.core.predictor import StragglerPredictor
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_architecture_shapes():
+    """Paper: encoder input->128->128->32 softplus; 2-layer LSTM(32); FC(2)."""
+    p = net.init_params(jax.random.PRNGKey(0), input_dim=55)
+    assert p["enc"][0]["w"].shape == (55, 128)
+    assert p["enc"][1]["w"].shape == (128, 128)
+    assert p["enc"][2]["w"].shape == (128, 128)
+    assert p["enc"][3]["w"].shape == (128, 32)
+    assert len(p["lstm"]) == 2
+    assert p["lstm"][0]["wx"].shape == (32, 128)  # 4 gates * 32
+    assert p["lstm"][1]["wx"].shape == (32, 128)
+    assert p["head"]["w"].shape == (32, 2)
+
+
+def test_output_constraints():
+    """alpha >= 1 (mean defined), beta > 0, for arbitrary inputs."""
+    p = net.init_params(jax.random.PRNGKey(1), input_dim=20)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (5, 7, 20)) * 10.0
+    ab = net.predict_sequence(p, xs)
+    assert ab.shape == (7, 2)
+    assert bool((ab[:, 0] >= 1.0).all())
+    assert bool((ab[:, 1] > 0.0).all())
+    assert bool(jnp.isfinite(ab).all())
+
+
+def test_ema_smooth():
+    seq = jnp.array([[1.0], [2.0], [3.0]])
+    out = net.ema_smooth(seq, w=0.8)
+    np.testing.assert_allclose(out[0], [1.0])
+    np.testing.assert_allclose(out[1], [0.8 * 2 + 0.2 * 1.0])
+    np.testing.assert_allclose(out[2], [0.8 * 3 + 0.2 * (0.8 * 2 + 0.2)])
+
+
+def test_lstm_cell_matches_manual():
+    layer = net._lstm_init(jax.random.PRNGKey(3), 4, 8)
+    h = jnp.zeros((8,))
+    c = jnp.zeros((8,))
+    x = jnp.ones((4,))
+    h2, c2 = net.lstm_cell_apply(layer, h, c, x)
+    z = x @ layer["wx"] + layer["b"]
+    i, f, g, o = jnp.split(z, 4)
+    c_ref = jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_ref = jax.nn.sigmoid(o) * jnp.tanh(c_ref)
+    np.testing.assert_allclose(h2, h_ref, rtol=1e-6)
+    np.testing.assert_allclose(c2, c_ref, rtol=1e-6)
+
+
+def test_training_reduces_loss():
+    """Network learns to regress (alpha, beta) from synthetic features."""
+    key = jax.random.PRNGKey(0)
+    dim = 16
+    n = 128
+    k1, k2, k3 = jax.random.split(key, 3)
+    # targets correlated with a linear readout of inputs
+    base = jax.random.uniform(k1, (n, dim))
+    targets = jnp.stack([1.5 + base[:, 0] * 2.0, 0.5 + base[:, 1]], -1)
+    xs = jnp.broadcast_to(base[None], (5, n, dim))
+    params = net.init_params(k2, dim)
+    opt = net.adam_init(params)
+    loss0 = float(net.mse_loss(params, xs, targets))
+    for _ in range(800):
+        params, opt, loss = net.train_step(params, opt, xs, targets, lr=3e-3)
+    assert float(loss) < loss0 * 0.5
+
+
+def test_predictor_end_to_end():
+    """StragglerPredictor: features -> (alpha, beta, K, E_S) batched."""
+    n_hosts, max_tasks, jobs, horizon = 4, 6, 3, 5
+    pred = StragglerPredictor(n_hosts=n_hosts, max_tasks=max_tasks,
+                              horizon=horizon, seed=0)
+    m_h = features.host_matrix(
+        util=jnp.full((n_hosts, 4), 0.5), cap=jnp.ones((n_hosts, 4)),
+        cost=jnp.ones(n_hosts), power_max=jnp.ones(n_hosts),
+        n_tasks=jnp.arange(n_hosts))
+    m_h_seq = jnp.broadcast_to(m_h[None], (horizon, *m_h.shape))
+    m_t = jnp.zeros((horizon, jobs, max_tasks, features.TASK_FEATURES))
+    q = jnp.array([6.0, 3.0, 2.0])
+    out = pred.predict(m_h_seq, m_t, q)
+    assert out.e_s.shape == (jobs,)
+    assert bool((out.alpha >= 1.0).all())
+    assert bool((out.e_s >= 0.0).all())
+    assert bool((out.e_s <= q).all())
+
+
+def test_predictor_fit_targets_match_mle():
+    times = pareto.sample_pareto(jax.random.PRNGKey(9), 2.0, 1.0, (4, 32))
+    pred = StragglerPredictor(n_hosts=2, max_tasks=4)
+    t = pred.make_targets(times)
+    a, b = pareto.fit_pareto(times)
+    np.testing.assert_allclose(t[:, 0], a)
+    np.testing.assert_allclose(t[:, 1], b)
+
+
+def test_feature_matrices():
+    m_h = features.host_matrix(
+        util=jnp.full((3, 4), 0.25), cap=jnp.ones((3, 4)) * 8,
+        cost=jnp.array([1.0, 2.0, 4.0]), power_max=jnp.array([100., 200., 50.]),
+        n_tasks=jnp.array([0, 5, 10]))
+    assert m_h.shape == (3, features.HOST_FEATURES)
+    assert float(m_h[:, 4:8].max()) == pytest.approx(1.0)  # caps normalized
+    m_t = features.task_matrix(req=jnp.ones((2, 4)) * 0.5,
+                               prev_host=jnp.array([0, -1]),
+                               n_hosts=3, max_tasks=5)
+    assert m_t.shape == (5, features.TASK_FEATURES)
+    np.testing.assert_allclose(m_t[2:], 0.0)  # padding
+    flat = features.flatten_inputs(m_h, m_t)
+    assert flat.shape == (features.input_dim(3, 5),)

@@ -1,0 +1,109 @@
+"""Unit + property tests for the Pareto straggler model (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pareto
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_cdf_basic():
+    a, b = 2.0, 1.0
+    assert float(pareto.pareto_cdf(0.5, a, b)) == 0.0
+    assert float(pareto.pareto_cdf(1.0, a, b)) == pytest.approx(0.0)
+    assert float(pareto.pareto_cdf(2.0, a, b)) == pytest.approx(0.75)
+    assert float(pareto.pareto_cdf(1e6, a, b)) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_mle_recovers_parameters():
+    key = jax.random.PRNGKey(0)
+    a_true, b_true = 2.5, 3.0
+    x = pareto.sample_pareto(key, a_true, b_true, (20000,))
+    a, b = pareto.fit_pareto(x)
+    assert float(b) == pytest.approx(b_true, rel=0.01)
+    assert float(a) == pytest.approx(a_true, rel=0.05)
+
+
+def test_mle_masked_matches_unmasked():
+    key = jax.random.PRNGKey(1)
+    x = pareto.sample_pareto(key, 2.0, 1.0, (64,))
+    xp = jnp.concatenate([x, jnp.zeros(16)])
+    mask = jnp.concatenate([jnp.ones(64), jnp.zeros(16)])
+    a1, b1 = pareto.fit_pareto(x)
+    a2, b2 = pareto.fit_pareto(xp, mask)
+    np.testing.assert_allclose(a1, a2, rtol=1e-6)
+    np.testing.assert_allclose(b1, b2, rtol=1e-6)
+
+
+def test_expected_stragglers_formula():
+    # E_S = q * (k*alpha/(alpha-1))^(-alpha): beta-free, in (0, q)
+    q, a, b = 10.0, 2.0, 5.0
+    es = float(pareto.expected_stragglers(q, a, b, k=1.5))
+    assert es == pytest.approx(10.0 * (1.5 * 2.0 / 1.0) ** -2.0)
+    es_other_beta = float(pareto.expected_stragglers(q, a, 50.0, k=1.5))
+    assert es == pytest.approx(es_other_beta)
+
+
+def test_es_monotone_in_k():
+    # larger threshold multiple -> fewer expected stragglers
+    q, a, b = 20.0, 1.8, 2.0
+    es = [float(pareto.expected_stragglers(q, a, b, k=k))
+          for k in (1.1, 1.5, 2.0, 3.0)]
+    assert all(x > y for x, y in zip(es, es[1:]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(alpha=st.floats(1.1, 8.0), beta=st.floats(0.1, 100.0),
+       seed=st.integers(0, 2**30))
+def test_property_mle_minimizes_nll(alpha, beta, seed):
+    """The MLE must have NLL <= nearby (alpha, beta) perturbations."""
+    key = jax.random.PRNGKey(seed)
+    x = pareto.sample_pareto(key, alpha, beta, (256,))
+    a_hat, b_hat = pareto.fit_pareto(x)
+    nll_hat = float(pareto.pareto_nll(x, a_hat, b_hat))
+    for da in (-0.2, 0.2):
+        a_pert = jnp.clip(a_hat * (1 + da), 1.001, 1e4)
+        assert nll_hat <= float(pareto.pareto_nll(x, a_pert, b_hat)) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(alpha=st.floats(1.1, 6.0), q=st.integers(1, 500))
+def test_property_es_bounds(alpha, q):
+    """0 < E_S < q for any valid tail index (k=1.5 > 1)."""
+    es = float(pareto.expected_stragglers(float(q), alpha, 1.0))
+    assert 0.0 < es < q
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**30), alpha=st.floats(1.2, 5.0),
+       beta=st.floats(0.5, 20.0))
+def test_property_empirical_straggler_fraction(seed, alpha, beta):
+    """Fraction of samples above K approximates E_S/q."""
+    key = jax.random.PRNGKey(seed)
+    n = 20000
+    x = pareto.sample_pareto(key, alpha, beta, (n,))
+    kthr = pareto.straggler_threshold(alpha, beta)
+    frac = float((x > kthr).mean())
+    expect = float(pareto.expected_stragglers(1.0, alpha, beta))
+    assert frac == pytest.approx(expect, abs=0.02)
+
+
+def test_f1_scores():
+    pred = jnp.array([1, 1, 0, 0, 1.0])
+    truth = jnp.array([1, 0, 0, 1, 1.0])
+    f1 = float(pareto.f1_score(pred, truth))
+    # tp=2 fp=1 fn=1 -> f1 = 2/(2+1) = 0.666..
+    assert f1 == pytest.approx(2 / 3, rel=1e-5)
+    assert 0.0 <= float(pareto.f1_score_paper(2.0, 1.0)) <= 1.0
+
+
+def test_degenerate_all_equal_times():
+    x = jnp.full((16,), 3.0)
+    a, b = pareto.fit_pareto(x)
+    assert np.isfinite(float(a)) and float(b) == pytest.approx(3.0)
+    es = float(pareto.expected_stragglers(16.0, a, b))
+    assert np.isfinite(es) and es >= 0.0

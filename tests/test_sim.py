@@ -1,0 +1,170 @@
+"""Simulator behaviour + invariant tests (engine, cluster, faults, metrics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sim import SimConfig, Simulation, small
+from repro.sim import engine as E
+from repro.sim.scheduler import RandomScheduler, UtilizationAwareScheduler
+from repro.sim.techniques import GRASS, SGC, Dolly, NearestFit, make
+
+
+def run_small(tech=None, **kw):
+    cfg = small(**kw)
+    sim = Simulation(cfg, technique=tech)
+    sim.run()
+    return sim
+
+
+def test_sim_runs_and_completes_jobs():
+    sim = run_small()
+    s = sim.summary()
+    assert s["tasks_done"] > 0
+    assert s["jobs_done"] > 0
+    assert s["avg_execution_time_s"] > 0
+    assert s["energy_kwh"] > 0
+
+
+def test_determinism():
+    s1 = run_small().summary()
+    s2 = run_small().summary()
+    for k in ("tasks_done", "avg_execution_time_s", "energy_kwh",
+              "sla_violation_rate"):
+        assert s1[k] == s2[k], k
+
+
+def test_task_state_conservation():
+    """Every original task is pending, running, done or cancelled; copies
+    only exist with a valid original."""
+    sim = run_small()
+    tt = sim.tasks
+    states = tt.view("state")
+    assert set(np.unique(states)) <= {E.PENDING, E.RUNNING, E.DONE,
+                                      E.CANCELLED}
+    copies = np.nonzero(tt.view("is_copy"))[0]
+    for c in copies:
+        assert 0 <= tt.orig[c] < tt.n
+    # a DONE original has finish >= submit
+    done = (states == E.DONE) & ~tt.view("is_copy")
+    assert (tt.view("finish_s")[done] >= tt.view("submit_s")[done]).all()
+
+
+def test_completed_job_accounting():
+    sim = run_small()
+    for rec in sim.completed_jobs:
+        assert (rec["times"] > 0).all()
+        assert rec["straggler"].shape == rec["times"].shape
+        assert len(sim.job_tasks[rec["job"]]) == len(rec["times"])
+
+
+def test_heterogeneous_hosts_exist():
+    sim = run_small(n_hosts=50)
+    assert len(np.unique(sim.cluster.speed)) > 1
+    assert len(np.unique(sim.cluster.type_names)) > 1
+
+
+def test_reserved_utilization_increases_exec_time():
+    base = run_small(n_intervals=80).summary()
+    loaded = run_small(n_intervals=80,
+                       reserved_utilization=0.6).summary()
+    assert loaded["avg_execution_time_s"] > base["avg_execution_time_s"]
+    assert loaded["energy_kwh"] > base["energy_kwh"]
+
+
+def test_faults_cause_restarts():
+    cfg = small(fault_host_rate=0.2, fault_task_rate=0.1, n_intervals=60)
+    sim = Simulation(cfg)
+    sim.run()
+    assert sim.tasks.view("restarts").sum() > 0
+
+
+def test_no_faults_no_restarts():
+    cfg = small(fault_host_rate=0.0, fault_task_rate=0.0,
+                fault_vm_creation_rate=0.0, n_intervals=40)
+    sim = Simulation(cfg)
+    sim.run()
+    assert sim.tasks.view("restarts").sum() == 0
+
+
+def test_speculation_first_wins_cancels_losers():
+    cfg = small(n_intervals=50)
+
+    class SpecEverything(E.Technique):
+        name = "spec-all"
+
+        def on_interval(self):
+            tt = self.sim.tasks
+            acts = []
+            for i in np.nonzero(tt.active_mask())[0][:5]:
+                if not tt.is_copy[i]:
+                    acts.append(E.SimAction("speculate", int(i), target=0))
+            return acts
+
+    sim = Simulation(cfg, technique=SpecEverything())
+    sim.run()
+    tt = sim.tasks
+    assert tt.view("is_copy").sum() > 0
+    # no task group has two DONE members
+    for c in np.nonzero(tt.view("is_copy"))[0]:
+        o = int(tt.orig[c])
+        group_done = int(tt.state[c] == E.DONE) + int(tt.state[o] == E.DONE)
+        if tt.state[o] == E.DONE and tt.state[c] == E.DONE:
+            # same finish stamp = copy won and completed the original
+            assert tt.finish_s[o] == tt.finish_s[c]
+
+
+def test_baseline_techniques_run():
+    for name in ("nearestfit", "dolly", "grass", "sgc", "wrangler",
+                 "igru-sd", "rpps"):
+        cfg = small(n_intervals=40, n_hosts=12, seed=3)
+        sim = Simulation(cfg, technique=make(name))
+        s = sim.run()
+        assert s["tasks_done"] > 0, name
+
+
+def test_sgc_creates_clones():
+    cfg = small(n_intervals=40, seed=1)
+    sim = Simulation(cfg, technique=SGC(p=1.0))
+    sim.run()
+    assert sim.tasks.view("is_copy").sum() > 0
+
+
+def test_random_vs_util_scheduler_differ():
+    cfg = small(n_intervals=50)
+    s1 = Simulation(cfg, scheduler=UtilizationAwareScheduler()).run()
+    cfg2 = small(n_intervals=50)
+    s2 = Simulation(cfg2, scheduler=RandomScheduler()).run()
+    assert s1["avg_execution_time_s"] != s2["avg_execution_time_s"]
+
+
+def test_actual_stragglers_per_interval():
+    sim = run_small()
+    actual = sim.actual_stragglers_per_interval()
+    assert len(actual) == sim.t
+    total = sum(rec["straggler"].sum() for rec in sim.completed_jobs)
+    if total > 0:
+        assert actual.sum() > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), res=st.sampled_from([0.0, 0.3, 0.6]))
+def test_property_engine_invariants(seed, res):
+    cfg = small(n_intervals=30, n_hosts=10, seed=seed,
+                reserved_utilization=res)
+    sim = Simulation(cfg)
+    sim.run()
+    tt = sim.tasks
+    # progress never exceeds work by more than one interval of top speed
+    run_or_done = np.isin(tt.view("state"), [E.RUNNING, E.DONE])
+    assert (tt.view("progress")[run_or_done] >= 0).all()
+    # all finish times within horizon
+    done = tt.view("state") == E.DONE
+    horizon = (cfg.n_intervals + 1) * cfg.interval_seconds
+    assert (tt.view("finish_s")[done] <= horizon).all()
+    # energy positive each interval, bounded by sum(power_max)
+    e = np.array(sim.log.energy_w)
+    assert (e > 0).all()
+    assert (e <= sim.cluster.power_max.sum() + 1e-6).all()
+    # utilization non-negative
+    assert (np.array(sim.log.util_cpu) >= 0).all()
