@@ -1,0 +1,17 @@
+# Tier-1 test lanes + benchmark entry points.
+
+PY := python
+
+.PHONY: test test-all sweep-bench bench
+
+test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
+	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
+
+test-all:  ## full tier-1 suite (ROADMAP verify command)
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+sweep-bench:  ## serial-vs-parallel scenario sweep benchmark
+	PYTHONPATH=src $(PY) benchmarks/sweep_bench.py
+
+bench:  ## paper figure reproductions (scaled-down)
+	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -29,7 +29,7 @@ def main() -> None:
     if not args.skip_sim:
         from benchmarks import sim_experiments as S
         t0 = time.time()
-        ctrl, warm = S._prep(args.full)
+        S.prep(args.full)  # warm the sweep pretrain cache once
         print(f"prep_start_training,{(time.time() - t0) * 1e6:.0f},"
               f"epochs+warmup")
 
@@ -40,10 +40,7 @@ def main() -> None:
                          ("fig9_mape", S.fig9_mape),
                          ("fig10_overhead", S.fig10_overhead)):
             t0 = time.time()
-            if name == "fig2_grid":
-                out = fn(args.full)
-            else:
-                out = fn(args.full, ctrl=ctrl, warm=warm)
+            out = fn(args.full)
             us = (time.time() - t0) * 1e6
             print(f"{name},{us:.0f},{json.dumps(out)}")
 

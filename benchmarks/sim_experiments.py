@@ -1,8 +1,14 @@
 """Paper figure reproductions (Figs. 2, 6-10) on the cloud simulator.
 
-Scaled-down defaults (hosts/intervals) keep CPU wall-clock sane; pass
---full for Table-4-scale runs. Every figure writes artifacts/figN*.csv and
-returns headline deltas that EXPERIMENTS.md compares against the paper.
+Figures 6-7 are QoS grids and run on the scenario-sweep subsystem
+(``repro.sim.sweep``): one declarative SweepSpec per sweep point, optional
+process-pool parallelism via ``workers``. Figures 8-10 need per-run sim
+internals (completion-time distributions, per-interval predictions) and use
+``sweep.make_technique`` + a direct Simulation, sharing the same pretrain
+cache. Scaled-down defaults (hosts/intervals) keep CPU wall-clock sane;
+pass --full for Table-4-scale runs. Every figure writes
+artifacts/figN*.csv and returns headline deltas that EXPERIMENTS.md
+compares against the paper.
 """
 from __future__ import annotations
 
@@ -10,114 +16,107 @@ import numpy as np
 
 from benchmarks.common import write_csv
 from repro.core import pareto
-from repro.sim import SimConfig, Simulation
+from repro.sim import Simulation, scenarios, sweep
 from repro.sim.metrics import mape
-from repro.sim.techniques import BASELINES, START, make
-from repro.sim.techniques.baselines import (IGRUSD, Wrangler, pretrain_igru,
-                                            pretrain_wrangler)
-from repro.sim.techniques.start_tech import pretrain
+from repro.sim.sweep import QOS_KEYS
+from repro.sim.techniques import BASELINES
 
-QOS_KEYS = ["avg_execution_time_s", "resource_contention", "energy_kwh",
-            "sla_violation_rate", "cpu_util_pct", "ram_util_pct",
-            "disk_util_pct", "bw_util_pct"]
+ALL_TECHNIQUES = ["start"] + BASELINES + ["none"]
 
 
-def _cfg(full: bool, **kw) -> SimConfig:
+def _sizing(full: bool) -> dict:
     """--full = paper scale (Table 4). Default is a scaled-down cluster;
     arrival_rate is scaled with host count so per-host load matches the
     paper's regime (400 VMs at lambda=1.2 is ~7-15% busy; keeping
     lambda=1.2 on 32 hosts would be ~10x the paper's load and puts every
     technique in a contention spiral — DESIGN.md deviations)."""
-    base = dict(n_hosts=400 if full else 32,
+    return dict(n_hosts=400 if full else 32,
                 n_intervals=288 if full else 72,
-                arrival_rate=1.2 if full else 0.6,
-                seed=kw.pop("seed", 0))
-    base.update(kw)
-    return SimConfig(**base)
+                arrival_rate=1.2 if full else 0.6)
 
 
-def _make_technique(name: str, ctrl, warmup_sim):
-    if name == "start":
-        return START(controller=ctrl)
-    t = make(name)
-    if isinstance(t, IGRUSD):
-        pretrain_igru(t, warmup_sim, epochs=60)
-    if isinstance(t, Wrangler):
-        pretrain_wrangler(t, warmup_sim)
-    return t
+def _cfg(full: bool, seed: int = 0, **kw):
+    s = _sizing(full)
+    s.update(kw)
+    return scenarios.make_config("planetlab", seed=seed, **s)
 
 
-def _run_all(cfg_fn, techniques, ctrl, warmup_sim, seeds=(0,)):
-    out = {}
-    for name in techniques:
-        sums = []
-        for seed in seeds:
-            cfg = cfg_fn(seed)
-            sim = Simulation(cfg, technique=_make_technique(
-                name, ctrl, warmup_sim))
-            sums.append(sim.run())
-        out[name] = {k: float(np.mean([s[k] for s in sums]))
-                     for k in QOS_KEYS}
-    return out
+def _epochs(full: bool) -> dict:
+    return dict(pretrain_epochs=30 if full else 8, igru_epochs=60)
 
 
-def _prep(full: bool):
-    """Train START + warmup sim once, reused by every figure."""
-    train_cfg = _cfg(full, seed=7)
-    ctrl = pretrain(train_cfg, epochs=8 if not full else 30, lr=1e-3)
-    warm = Simulation(_cfg(full, seed=9))
-    warm.run()
-    return ctrl, warm
+def prep(full: bool) -> None:
+    """Pretrain START/IGRU-SD/Wrangler once on the base config; later
+    figure runs (serial path) hit the in-process sweep cache."""
+    cfg = _cfg(full)
+    for name in ("start", "igru-sd", "wrangler"):
+        sweep.make_technique(name, cfg, **_epochs(full))
 
 
-def fig6_utilization(full: bool = False, ctrl=None, warm=None) -> dict:
+def _make_technique(full: bool, name: str):
+    """Cell technique; pretraining always happens on the base config
+    (figure-wide shared cache), never the per-cell override config."""
+    return sweep.make_technique(name, _cfg(full), **_epochs(full))
+
+
+def _run_grid(full: bool, techniques, seeds=(0,), overrides=None,
+              workers: int | None = 1) -> dict:
+    """One sweep point: techniques x seeds on the planetlab scenario with
+    ``overrides`` applied, aggregated to {technique: {metric: mean}}.
+
+    ``workers`` defaults to serial: the pretrain cache warmed by
+    ``prep()`` lives in this process, while every spawned worker of every
+    sweep point re-pretrains START/IGRU-SD/Wrangler from scratch — only
+    raise ``workers`` for technique lists that skip pretraining, or when
+    per-worker pretraining is an acceptable price."""
+    spec = sweep.SweepSpec(
+        techniques=tuple(techniques), seeds=tuple(seeds),
+        scenarios=("planetlab",), overrides=tuple((overrides or {}).items()),
+        max_workers=workers, **_sizing(full), **_epochs(full))
+    agg = sweep.run(spec).aggregate()
+    return {t: {k: agg[("planetlab", t)][k]["mean"] for k in QOS_KEYS}
+            for t in techniques}
+
+
+def fig6_utilization(full: bool = False, workers: int | None = 1) -> dict:
     """QoS vs reserved utilization (20-80%)."""
-    if ctrl is None:
-        ctrl, warm = _prep(full)
-    techniques = ["start"] + BASELINES + ["none"]
     rows = []
     results = {}
     for res in (0.2, 0.4, 0.6, 0.8):
-        r = _run_all(lambda seed: _cfg(full, reserved_utilization=res,
-                                       seed=seed),
-                     techniques, ctrl, warm)
+        r = _run_grid(full, ALL_TECHNIQUES,
+                      overrides=dict(reserved_utilization=res),
+                      workers=workers)
         results[res] = r
         for name, qos in r.items():
             rows.append([res, name] + [qos[k] for k in QOS_KEYS])
-    write_csv("fig6_utilization.csv", ["reserved", "technique"] + QOS_KEYS,
-              rows)
+    write_csv("fig6_utilization.csv", ["reserved", "technique"]
+              + list(QOS_KEYS), rows)
     return _headline(results)
 
 
-def fig7_workloads(full: bool = False, ctrl=None, warm=None) -> dict:
+def fig7_workloads(full: bool = False, workers: int | None = 1) -> dict:
     """QoS vs number of workloads (arrival-rate sweep)."""
-    if ctrl is None:
-        ctrl, warm = _prep(full)
-    techniques = ["start"] + BASELINES + ["none"]
     rows = []
     results = {}
     for lam in (0.8, 1.2, 1.8, 2.4):
-        r = _run_all(lambda seed: _cfg(full, arrival_rate=lam, seed=seed),
-                     techniques, ctrl, warm)
+        r = _run_grid(full, ALL_TECHNIQUES,
+                      overrides=dict(arrival_rate=lam), workers=workers)
         results[lam] = r
         for name, qos in r.items():
             rows.append([lam, name] + [qos[k] for k in QOS_KEYS])
     write_csv("fig7_workloads.csv", ["arrival_rate", "technique"]
-              + QOS_KEYS, rows)
+              + list(QOS_KEYS), rows)
     return _headline(results)
 
 
-def fig8_completion_variance(full: bool = False, ctrl=None,
-                             warm=None) -> dict:
+def fig8_completion_variance(full: bool = False) -> dict:
     """Completion-time variance across workloads per technique."""
-    if ctrl is None:
-        ctrl, warm = _prep(full)
     rows = []
     out = {}
     for name in ["start"] + BASELINES:
         for res in (0.2, 0.8):
-            sim = Simulation(_cfg(full, reserved_utilization=res, seed=3),
-                             technique=_make_technique(name, ctrl, warm))
+            cfg = _cfg(full, seed=3, reserved_utilization=res)
+            sim = Simulation(cfg, technique=_make_technique(full, name))
             sim.run()
             times = np.concatenate(
                 [r["times"] for r in sim.completed_jobs]) \
@@ -133,17 +132,15 @@ def fig8_completion_variance(full: bool = False, ctrl=None,
     return {"start_std": start_std, "baseline_std": base_std}
 
 
-def fig9_mape(full: bool = False, ctrl=None, warm=None) -> dict:
+def fig9_mape(full: bool = False) -> dict:
     """Prediction accuracy: MAPE of START vs IGRU-SD vs RPPS."""
-    if ctrl is None:
-        ctrl, warm = _prep(full)
     rows = []
     out = {}
     for name in ("start", "igru-sd", "rpps"):
         vals = []
         for seed in (0, 1, 2):
-            sim = Simulation(_cfg(full, seed=seed),
-                             technique=_make_technique(name, ctrl, warm))
+            cfg = _cfg(full, seed=seed)
+            sim = Simulation(cfg, technique=_make_technique(full, name))
             sim.run()
             actual = sim.actual_stragglers_per_interval()
             pred = np.array(sim.log.predicted_stragglers, float)
@@ -156,15 +153,13 @@ def fig9_mape(full: bool = False, ctrl=None, warm=None) -> dict:
     return out
 
 
-def fig10_overhead(full: bool = False, ctrl=None, warm=None) -> dict:
+def fig10_overhead(full: bool = False) -> dict:
     """Decision overhead per technique amortized over task exec time."""
-    if ctrl is None:
-        ctrl, warm = _prep(full)
     rows = []
     out = {}
     for name in ["start"] + BASELINES:
-        sim = Simulation(_cfg(full, seed=4),
-                         technique=_make_technique(name, ctrl, warm))
+        cfg = _cfg(full, seed=4)
+        sim = Simulation(cfg, technique=_make_technique(full, name))
         s = sim.run()
         oh = s["avg_overhead_s"]
         rel = oh / max(s["avg_execution_time_s"], 1e-9) * 100
@@ -185,13 +180,12 @@ def fig2_grid_search(full: bool = False) -> dict:
     jobs = sim.completed_jobs
     rows = []
     best = (None, -1.0)
-    import jax.numpy as jnp
     for k in (1.1, 1.3, 1.5, 1.7, 2.0):
         tp = fp = fn = 0
         for rec in jobs:
             times = rec["times"]
-            a, b = pareto.fit_pareto(jnp.asarray(times))
-            thr = float(pareto.straggler_threshold(a, b, k))
+            a, b = pareto.fit_pareto_np(times)
+            thr = float(pareto.straggler_threshold_np(a, b, k))
             pred = times > thr
             truth = rec["straggler"]  # ground truth at k=1.5 (paper's def)
             tp += int((pred & truth).sum())

@@ -1,0 +1,87 @@
+"""Serial-vs-parallel benchmark for the scenario-sweep subsystem.
+
+Runs the same SweepSpec grid twice — once with max_workers=1 (the old
+hand-rolled-loop execution model) and once over the process pool — checks
+the results are bitwise-equal, and reports the wall-clock speedup plus
+per-cell engine throughput. Writes artifacts/sweep_bench.csv.
+
+    PYTHONPATH=src python benchmarks/sweep_bench.py [--quick] [--workers N]
+
+On a 4-core runner the full grid shows >= 2x speedup; --quick shrinks the
+grid for smoke runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import write_csv  # noqa: E402
+
+from repro.sim import scenarios  # noqa: E402
+from repro.sim.sweep import (SweepSpec, deterministic_summary,  # noqa: E402
+                             run)
+
+
+def bench_spec(quick: bool) -> SweepSpec:
+    return SweepSpec(
+        techniques=("none", "sgc", "dolly") if quick
+        else ("none", "sgc", "dolly", "grass", "nearestfit"),
+        seeds=(0, 1) if quick else (0, 1, 2, 3),
+        scenarios=tuple(scenarios.names())[:4] if quick
+        else tuple(scenarios.names()),
+        n_hosts=32 if quick else 64,
+        n_intervals=72 if quick else 288,
+        arrival_rate=0.8 if quick else 1.0,
+    )
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="parallel worker count (default: cpu count)")
+    args = ap.parse_args(argv)
+
+    spec = bench_spec(args.quick)
+    n_workers = args.workers or (os.cpu_count() or 1)
+
+    serial = run(dataclasses.replace(spec, max_workers=1))
+    parallel = run(dataclasses.replace(spec, max_workers=n_workers))
+
+    equal = all(deterministic_summary(a.summary)
+                == deterministic_summary(b.summary)
+                for a, b in zip(serial.cells, parallel.cells))
+    speedup = serial.wall_s / max(parallel.wall_s, 1e-9)
+    cell_s = np.array([c.wall_s for c in serial.cells])
+
+    rows = [
+        ["cells", len(serial.cells), ""],
+        ["serial_wall_s", round(serial.wall_s, 2), ""],
+        [f"parallel_wall_s (x{parallel.n_workers})",
+         round(parallel.wall_s, 2), ""],
+        ["speedup", round(speedup, 2), ""],
+        ["bitwise_equal", int(equal), ""],
+        ["cell_wall_s_mean", round(float(cell_s.mean()), 3), ""],
+        ["cell_wall_s_p95", round(float(np.percentile(cell_s, 95)), 3), ""],
+    ]
+    write_csv("sweep_bench.csv", ["metric", "value", "note"], rows)
+
+    print(f"{len(serial.cells)} cells "
+          f"({len(spec.scenarios)} scenarios x {len(spec.techniques)} "
+          f"techniques x {len(spec.seeds)} seeds)")
+    print(f"serial:   {serial.wall_s:7.2f}s")
+    print(f"parallel: {parallel.wall_s:7.2f}s  ({parallel.n_workers} "
+          f"workers, speedup {speedup:.2f}x)")
+    print(f"bitwise-equal results: {equal}")
+    assert equal, "parallel sweep diverged from serial"
+    return {"speedup": speedup, "equal": equal,
+            "cells": len(serial.cells)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,40 +1,42 @@
 """Paper-scenario example: full technique comparison on the cloud
-simulator (a fast version of benchmarks Figs. 6-10).
+simulator, run through the scenario-sweep subsystem — a fast version of
+benchmarks Figs. 6-10 that also shows how conclusions shift across
+workload regimes (planetlab vs heavy-tail).
 
     PYTHONPATH=src python examples/cloud_straggler_sim.py
 """
-import numpy as np
+from repro.sim import scenarios, sweep
+from repro.sim.techniques import BASELINES
 
-from repro.sim import SimConfig, Simulation
-from repro.sim.techniques import BASELINES, START, make
-from repro.sim.techniques.baselines import (IGRUSD, Wrangler, pretrain_igru,
-                                            pretrain_wrangler)
-from repro.sim.techniques.start_tech import pretrain
 
-cfg_train = SimConfig(n_hosts=24, n_intervals=60, seed=7)
-print("pretraining START's Encoder-LSTM on a random-scheduler run...")
-ctrl = pretrain(cfg_train, epochs=8, lr=1e-3)
-warm = Simulation(SimConfig(n_hosts=24, n_intervals=60, seed=9))
-warm.run()
+def main() -> None:
+    spec = sweep.SweepSpec(
+        techniques=("none", *BASELINES, "start"),
+        seeds=(1, 2),
+        scenarios=("planetlab", "heavy-tail"),
+        n_hosts=24, n_intervals=60, arrival_rate=0.6,
+        max_workers=1,  # bump for a process-pool run
+    )
+    print(f"sweep: {len(spec.cells())} cells "
+          f"({len(spec.scenarios)} scenarios x {len(spec.techniques)} "
+          f"techniques x {len(spec.seeds)} seeds); START/IGRU-SD/Wrangler "
+          f"pretrain per scenario on first use...")
+    result = sweep.run(spec)
+    agg = result.aggregate()
 
-print(f"{'technique':>12} {'exec_s':>8} {'contention':>10} "
-      f"{'energy_kwh':>10} {'sla_viol':>8}")
-for name in ["none"] + BASELINES + ["start"]:
-    if name == "start":
-        tech = START(controller=ctrl)
-    else:
-        tech = make(name)
-        if isinstance(tech, IGRUSD):
-            pretrain_igru(tech, warm, epochs=40)
-        if isinstance(tech, Wrangler):
-            pretrain_wrangler(tech, warm)
-    vals = []
-    for seed in (1, 2):
-        sim = Simulation(SimConfig(n_hosts=24, n_intervals=80, seed=seed),
-                         technique=tech if seed == 1 else tech)
-        vals.append(sim.run())
-    s = {k: float(np.mean([v[k] for v in vals])) for k in vals[0]
-         if isinstance(vals[0][k], (int, float))}
-    print(f"{name:>12} {s['avg_execution_time_s']:8.1f} "
-          f"{s['resource_contention']:10.2f} {s['energy_kwh']:10.2f} "
-          f"{s['sla_violation_rate']:8.3f}")
+    for sc in spec.scenarios:
+        print(f"\n=== scenario: {sc} — {scenarios.get(sc).stresses} ===")
+        print(f"{'technique':>12} {'exec_s':>8} {'contention':>10} "
+              f"{'energy_kwh':>10} {'sla_viol':>8}")
+        for name in spec.techniques:
+            s = agg[(sc, name)]
+            print(f"{name:>12} {s['avg_execution_time_s']['mean']:8.1f} "
+                  f"{s['resource_contention']['mean']:10.2f} "
+                  f"{s['energy_kwh']['mean']:10.2f} "
+                  f"{s['sla_violation_rate']['mean']:8.3f}")
+    print(f"\ntotal wall: {result.wall_s:.1f}s "
+          f"({result.n_workers} worker(s))")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_K = 1.5  # paper §3.1: empirically best F1 (Fig. 2)
 _EPS = 1e-8
@@ -70,6 +71,33 @@ def fit_pareto(times: jax.Array, mask: jax.Array | None = None
     denom = logs.sum(-1) - q * jnp.log(beta)
     alpha = q / jnp.maximum(denom, _EPS)
     return jnp.clip(alpha, _ALPHA_MIN, _ALPHA_MAX), beta
+
+
+def fit_pareto_np(times, mask=None):
+    """NumPy twin of ``fit_pareto`` for per-job hot loops.
+
+    The simulator fits thousands of tiny (q = 2-10) jobs per run; routing
+    those through jnp pays an XLA compile per distinct shape plus device
+    dispatch per op. Same float32 formula, returns numpy scalars/arrays.
+    """
+    t = np.asarray(times, np.float32)
+    if mask is None:
+        m = np.ones_like(t)
+    else:
+        m = np.asarray(mask, np.float32)
+    q = np.maximum(m.sum(-1), np.float32(1.0))
+    big = np.where(m > 0, t, np.float32(np.inf))
+    beta = np.clip(big.min(axis=-1), _EPS, None).astype(np.float32)
+    logs = np.where(m > 0, np.log(np.maximum(t, np.float32(_EPS))),
+                    np.float32(0.0))
+    denom = logs.sum(-1) - q * np.log(beta)
+    alpha = q / np.maximum(denom, np.float32(_EPS))
+    return np.clip(alpha, _ALPHA_MIN, _ALPHA_MAX), beta
+
+
+def straggler_threshold_np(alpha, beta, k: float = DEFAULT_K):
+    """NumPy twin of ``straggler_threshold``."""
+    return k * alpha * beta / (alpha - 1.0)
 
 
 def straggler_threshold(alpha: jax.Array, beta: jax.Array,

@@ -1,0 +1,16 @@
+"""Version-compat shims for ``jax.experimental.pallas.tpu``.
+
+The TPU compiler-params dataclass was renamed across jax releases
+(``TPUCompilerParams`` in jax 0.4.x, ``CompilerParams`` in newer jax).
+All kernels import the name from here so they run on either version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

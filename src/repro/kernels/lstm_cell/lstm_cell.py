@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import CompilerParams
 
 
 def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out, c_out):
@@ -68,7 +68,7 @@ def lstm_cell_pallas(x: jax.Array, h: jax.Array, c: jax.Array,
         out_specs=(pl.BlockSpec((block_b, hid), lambda ib: (ib, 0)),
                    pl.BlockSpec((block_b, hid), lambda ib: (ib, 0))),
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, h, c, wx, wh, b2)

@@ -95,11 +95,18 @@ def main(argv=None) -> dict:
             for a in acts:
                 print(f"[start-runtime] step {step}: {a.kind.value} "
                       f"host={a.host} backup={a.backup}")
-        if writer and step > start and step % args.ckpt_every == 0:
-            writer.submit(step, (params, opt_state))
         if args.kill_at is not None and step >= args.kill_at:
+            if writer is not None:
+                # the drill kills the training loop, not the storage layer:
+                # checkpoints submitted at earlier steps would be durable
+                # long before a real crash this many steps later. (Checked
+                # before this step's own submit — a checkpoint submitted
+                # at the crash instant would NOT survive a real crash.)
+                writer.flush()
             print(f"[train] FAULT DRILL: dying at step {step}")
             raise SystemExit(42)
+        if writer and step > start and step % args.ckpt_every == 0:
+            writer.submit(step, (params, opt_state))
         if step % args.log_every == 0:
             print(f"[train] step {step} loss {loss:.4f} "
                   f"lr {float(metrics['lr']):.2e} "

@@ -180,11 +180,14 @@ class Model:
 
     # --------------------------- MoE plumbing ------------------------------
 
-    def _routed(self, p_moe: dict, x: jax.Array) -> jax.Array:
+    def _routed(self, p_moe: dict, x: jax.Array,
+                mode: str = "train") -> jax.Array:
         cfg, ep = self.cfg, self.ep
+        inference = mode != "train"  # prefill/decode: dropless dispatch
         if ep is None or ep.n_shards == 1:
             y = Moe.moe_apply({k: v for k, v in p_moe.items()
-                               if k != "shared"}, cfg, x, None)
+                               if k != "shared"}, cfg, x, None,
+                              inference=inference)
         else:
             espec = {"router": P(), "wg": P(ep.ep_axis, None, None),
                      "wu": P(ep.ep_axis, None, None),
@@ -196,7 +199,8 @@ class Model:
             xspec = P(bdim, None, None)
             ctx = Moe.EPContext(axis=ep.ep_axis, n_shards=ep.n_shards)
             fn = shard_map(
-                lambda pm, xl: Moe.moe_apply(pm, self.cfg, xl, ctx),
+                lambda pm, xl: Moe.moe_apply(pm, self.cfg, xl, ctx,
+                                             inference=inference),
                 mesh=ep.mesh,
                 in_specs=(espec, xspec), out_specs=xspec,
                 check_rep=False)
@@ -228,12 +232,12 @@ class Model:
             o, c = L.attn_decode(p["attn"], cfg, h, cache, pos, cos, sin)
         return x + o, c
 
-    def _ff_sublayer(self, p, x):
+    def _ff_sublayer(self, p, x, mode="train"):
         cfg = self.cfg
         h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
         out = jnp.zeros_like(x)
         if "moe" in p:
-            out = out + self._routed(p["moe"], h)
+            out = out + self._routed(p["moe"], h, mode)
         if "mlp" in p:
             out = out + L.mlp_apply(p["mlp"], h)
         return x + out
@@ -244,7 +248,7 @@ class Model:
         if enc is not None:  # decoder cross-attention
             hx = L.rms_norm(p["ln_x"], x, self.cfg.norm_eps)
             x = x + L.cross_attn_apply(p["xattn"], self.cfg, hx, enc)
-        x = self._ff_sublayer(p, x)
+        x = self._ff_sublayer(p, x, mode)
         return x, c
 
     def _ssm_layer(self, p, x, mode, cache):
@@ -291,7 +295,7 @@ class Model:
             if (j % cfg.moe_every) == (cfg.moe_every - 1):
                 pm = jax.tree_util.tree_map(lambda a, i=i_moe: a[i],
                                             p["moe"])
-                x = x + self._routed(pm, h)
+                x = x + self._routed(pm, h, mode)
                 i_moe += 1
             else:
                 pf = jax.tree_util.tree_map(lambda a, i=i_ff: a[i],

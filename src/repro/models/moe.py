@@ -104,18 +104,38 @@ def _capacity(tokens: int, n_experts: int, top_k: int, cf: float) -> int:
 
 
 def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
-              ep: EPContext | None = None) -> jax.Array:
+              ep: EPContext | None = None,
+              inference: bool = False) -> jax.Array:
     """x: (B, S, d) -> (B, S, d). In EP mode this function must be called
     *inside* shard_map with ``p`` holding the local expert slices and x the
-    local activations (replicated over the EP axis)."""
+    local activations (replicated over the EP axis).
+
+    ``inference`` switches to dropless dispatch (capacity = worst-case T*k):
+    capacity drops are a training-throughput tradeoff, but at inference they
+    make prefill logits depend on which other tokens share the batch — the
+    last prefill token's expert copy can be dropped while the same token
+    decoded alone is not, breaking prefill/decode equivalence.
+    """
     b, s, d = x.shape
     xt = x.reshape(b * s, d)
     w, idx = _route(p["router"], xt, cfg.top_k)
     w = w.astype(x.dtype)
 
-    if ep is None or ep.n_shards == 1:
+    if inference:
+        # dropless: the router picks distinct experts per token, so one
+        # expert can receive at most T copies. Exact droplessness costs an
+        # O(E*T*d) dispatch buffer, so large prefills fall back to a
+        # 2x-headroom capacity — drops then need >2.5x routing imbalance
+        # on an already-large batch, where they are statistically benign
+        t = b * s
+        cap = max(8, -(-t // 8) * 8)
+        if t > 1024:
+            cap = min(cap, _capacity(t, cfg.n_experts, cfg.top_k,
+                                     2.0 * cfg.capacity_factor))
+    else:
         cap = _capacity(b * s, cfg.n_experts, cfg.top_k,
                         cfg.capacity_factor)
+    if ep is None or ep.n_shards == 1:
         y = grouped_ffn(xt, idx, w, jnp.ones_like(idx, bool),
                         p["wg"], p["wu"], p["wd"], cap)
     else:
@@ -125,8 +145,6 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
         idx_loc = jnp.where(mine, idx - me * e_loc, 0)
         # per-expert capacity is mesh-size independent: expected tokens per
         # expert = T*k/E whether or not experts are sharded
-        cap = _capacity(b * s, cfg.n_experts, cfg.top_k,
-                        cfg.capacity_factor)
         y = grouped_ffn(xt, idx_loc, w, mine,
                         p["wg"], p["wu"], p["wd"], cap)
         y = jax.lax.psum(y, ep.axis)

@@ -3,4 +3,6 @@ from repro.sim.config import SimConfig, small
 from repro.sim.engine import NoMitigation, SimAction, Simulation, Technique
 
 __all__ = ["SimConfig", "small", "Simulation", "Technique", "SimAction",
-           "NoMitigation"]
+           "NoMitigation", "scenarios", "sweep"]
+
+from repro.sim import scenarios, sweep  # noqa: E402  (registry + grid runner)

@@ -8,6 +8,9 @@ jobs (50% deadline-driven), and Weibull(k=1.5, lambda=2) fault injection.
 from __future__ import annotations
 
 import dataclasses
+import functools
+
+import numpy as np
 
 INTERVAL_SECONDS = 300.0  # PlanetLab scheduling interval size (§4.2)
 
@@ -51,11 +54,20 @@ class SimConfig:
     work_mean: float = 10000.0       # cloud workload size 10000 +- 3000 (T4)
     work_std: float = 3000.0
     work_pareto_tail: float = 2.2    # heavy-tail mix so times are Pareto-ish
+    heavy_fraction: float = 0.15     # fraction of tasks drawn from the tail
+    # flash-crowd bursts (scenario registry): while burst_period > 0 and
+    # t mod burst_period < burst_width, arrivals are scaled by
+    # burst_multiplier on top of the diurnal curve
+    burst_period: int = 0
+    burst_width: int = 0
+    burst_multiplier: float = 1.0
     # Effective MI/s per unit host speed. Table 4 lists 2000 MIPS, which with
     # 10000-MI tasks gives sub-second tasks that could never straggle across
     # 300 s PlanetLab intervals; we rescale so the mean task spans ~4
     # intervals, as in the trace dataset (deviation noted in DESIGN.md).
-    host_ips: float = 8.33
+    # A tuple means a heterogeneous fleet: values are tiled across hosts
+    # (host h gets host_ips[h mod len]).
+    host_ips: float | tuple = 8.33
     restart_overhead_s: float = 30.0  # R_i per restart (Eq. 8)
     deadline_slack: tuple = (1.6, 3.0)  # x expected time
     # faults (§4.3): Weibull(k=1.5, lambda=2) inter-failure, ephemeral
@@ -75,6 +87,21 @@ class SimConfig:
     @property
     def interval_seconds(self) -> float:
         return INTERVAL_SECONDS
+
+    @functools.cached_property
+    def host_ips_mean(self) -> float:
+        """Fleet-average MI/s per unit speed (scalar even when host_ips
+        describes a heterogeneous fleet; averages the actual tiled
+        fleet, which differs from mean(host_ips) when n_hosts is not a
+        multiple of the tuple length). Cached: it sits in per-task hot
+        loops, and configs are treated as immutable once a Simulation is
+        built."""
+        return float(self.host_ips_array().mean())
+
+    def host_ips_array(self) -> np.ndarray:
+        """(n_hosts,) per-host MI/s per unit speed."""
+        return np.resize(np.asarray(self.host_ips, float).ravel(),
+                         self.n_hosts)
 
 
 def small(**kw) -> SimConfig:

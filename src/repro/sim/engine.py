@@ -52,6 +52,8 @@ class TaskTable:
         self.req = np.zeros((cap, 4))
 
     def _grow(self, need: int) -> None:
+        if self.n + need <= self._cap:  # amortized O(1): copy only on growth
+            return
         while self.n + need > self._cap:
             self._cap *= 2
         for f, dt in self._F.items():
@@ -64,16 +66,23 @@ class TaskTable:
         self.req = r
 
     def add(self, **kw) -> int:
-        self._grow(1)
-        i = self.n
-        self.n += 1
-        self.host[i] = -1
-        self.orig[i] = -1
-        self.prev_host[i] = -1
-        self.finish_s[i] = -1.0
+        return int(self.add_batch(1, **kw)[0])
+
+    def add_batch(self, n_new: int, **kw) -> np.ndarray:
+        """Vectorized add of n_new tasks; kw values are scalars or (n_new,)
+        arrays. Returns the new task indices."""
+        if n_new == 0:
+            return np.zeros(0, np.int64)
+        self._grow(n_new)
+        idx = np.arange(self.n, self.n + n_new, dtype=np.int64)
+        self.n += n_new
+        self.host[idx] = -1
+        self.orig[idx] = -1
+        self.prev_host[idx] = -1
+        self.finish_s[idx] = -1.0
         for k, v in kw.items():
-            getattr(self, k)[i] = v
-        return i
+            getattr(self, k)[idx] = v
+        return idx
 
     def active_mask(self) -> np.ndarray:
         return (self.state[:self.n] == RUNNING)
@@ -127,9 +136,17 @@ class Simulation:
         self.tasks = TaskTable()
         self.log = M.MetricsLog()
         self.t = 0  # current interval index
+        self.host_ips = cfg.host_ips_array()  # (n_hosts,) MI/s per speed
         self.job_tasks: dict[int, list[int]] = {}
         self.job_deadline: dict[int, bool] = {}
         self.jobs_done: set[int] = set()
+        # incremental job-completion bookkeeping (replaces the per-interval
+        # all-jobs/all-tasks scan): count of non-terminal original tasks per
+        # job, jobs that hit zero this interval, and orig -> copy ids so
+        # first-result-wins cancellation never scans the full task table
+        self._job_open: dict[int, int] = {}
+        self._jobs_newly_closed: list[int] = []
+        self._copy_groups: dict[int, list[int]] = {}
         self.straggler_ma = np.zeros(cfg.n_hosts)
         self.host_straggler_counts = np.zeros(cfg.n_hosts)
         # per completed job: (finish interval, task times, straggler flags,
@@ -145,10 +162,8 @@ class Simulation:
         return self.t * self.cfg.interval_seconds
 
     def active_jobs(self) -> list[int]:
-        return [j for j, tids in self.job_tasks.items()
-                if j not in self.jobs_done
-                and any(self.tasks.state[i] in (PENDING, RUNNING)
-                        for i in tids)]
+        return [j for j, open_n in self._job_open.items()
+                if open_n > 0 and j not in self.jobs_done]
 
     def job_incomplete_tasks(self, job: int) -> list[int]:
         return [i for i in self.job_tasks[job]
@@ -174,21 +189,21 @@ class Simulation:
         self.cluster.begin_interval()
         self._interval_straggler_done = []
 
-        # 1. arrivals
+        # 1. arrivals (batched task insertion)
         batch = self.workload.sample_interval(self.t)
-        new_idx = []
-        for j in range(len(batch.job_ids)):
-            i = tt.add(job_id=batch.job_ids[j], state=PENDING,
-                       work=batch.work[j], submit_s=self.now_s,
-                       deadline_s=batch.deadline_rel[j],
-                       is_deadline=batch.is_deadline[j],
-                       sla_weight=batch.sla_weight[j])
-            tt.req[i] = batch.req[j]
-            jid = int(batch.job_ids[j])
-            self.job_tasks.setdefault(jid, []).append(i)
-            self.job_deadline[jid] = bool(batch.is_deadline[j])
-            new_idx.append(i)
-        new_idx = np.array(new_idx, np.int64)
+        new_idx = tt.add_batch(
+            len(batch.job_ids), job_id=batch.job_ids, state=PENDING,
+            work=batch.work, submit_s=self.now_s,
+            deadline_s=batch.deadline_rel, is_deadline=batch.is_deadline,
+            sla_weight=batch.sla_weight)
+        if len(new_idx):
+            tt.req[new_idx] = batch.req
+        for i, jid in zip(new_idx, batch.job_ids):
+            jid = int(jid)
+            self.job_tasks.setdefault(jid, []).append(int(i))
+            self._job_open[jid] = self._job_open.get(jid, 0) + 1
+        for jid, dl in zip(batch.job_ids, batch.is_deadline):
+            self.job_deadline[int(jid)] = bool(dl)
 
         # 2. technique submission hook (clone / delay)
         t0 = _time.perf_counter()
@@ -200,13 +215,16 @@ class Simulation:
         events = self.faults.interval_events()
         vm_fault_hosts = {e.host for e in events
                           if e.kind == FaultKind.VM_CREATION}
-        for i in np.nonzero(tt.view("state") == PENDING)[0]:
-            if tt.delayed_until[i] > self.t:
-                continue
+        ready = np.nonzero((tt.view("state") == PENDING)
+                           & (tt.view("delayed_until") <= self.t))[0]
+        for i in ready:
             self._place(int(i))
             if int(tt.host[i]) in vm_fault_hosts:   # VM creation fault:
                 tt.state[i] = PENDING               # bounce to next interval
                 tt.restarts[i] += 1
+                tt.prev_host[i] = tt.host[i]        # avoid on re-place; a
+                tt.host[i] = -1                     # pending task holds no
+                                                    # host (straggler credit)
 
         # 4. fault events
         for ev in events:
@@ -233,17 +251,24 @@ class Simulation:
         active = tt.active_mask()
         self.cluster.recompute_utilization(tt.view("req")[:, :],
                                            tt.view("host"), active)
-        rate = self.cluster.effective_speed() * cfg.host_ips  # MI/s per host
+        rate = self.cluster.effective_speed() * self.host_ips  # MI/s, per host
         run = np.nonzero(active)[0]
         inc = rate[tt.host[run]] * cfg.interval_seconds
         prog0 = tt.progress[run]
         tt.progress[run] = prog0 + inc
         finished = tt.progress[run] >= tt.work[run]
-        for i, fin, p0, dinc in zip(run, finished, prog0, inc):
-            if fin:
-                frac = np.clip((tt.work[i] - p0) / max(dinc, 1e-9), 0, 1)
-                self._complete(int(i), self.now_s
-                               + frac * cfg.interval_seconds)
+        fin_idx = run[finished]
+        if fin_idx.size:
+            frac = np.clip((tt.work[fin_idx] - prog0[finished])
+                           / np.maximum(inc[finished], 1e-9), 0, 1)
+            fins = self.now_s + frac * cfg.interval_seconds
+            # first-result-wins is decided by interpolated finish time:
+            # complete earliest-first and skip tasks a sibling already
+            # cancelled (or completed) earlier within this interval
+            order = np.argsort(fins, kind="stable")
+            for i, fs in zip(fin_idx[order], fins[order]):
+                if tt.state[i] == RUNNING:
+                    self._complete(int(i), float(fs))
 
         self.util_history.append(self.cluster.util.copy())
 
@@ -289,6 +314,7 @@ class Simulation:
                            sla_weight=tt.sla_weight[i], is_copy=True,
                            orig=i)
                 tt.req[j] = tt.req[i]
+                self._copy_groups.setdefault(int(i), []).append(j)
                 self._place(j, forced=act.target)
 
     def _restart(self, i: int, target: int | None = None) -> None:
@@ -308,38 +334,54 @@ class Simulation:
         tt.finish_s[i] = finish_s
         # first-result-wins across {original, copies}
         orig = int(tt.orig[i]) if tt.is_copy[i] else i
-        if tt.is_copy[i] and tt.state[orig] in (PENDING, RUNNING):
-            tt.state[orig] = DONE
-            tt.finish_s[orig] = finish_s
-        group = np.nonzero((tt.view("orig") == orig)
-                           & (tt.view("state") != DONE))[0]
-        for g in group:
-            tt.state[g] = CANCELLED
+        if tt.is_copy[i]:
+            if tt.state[orig] in (PENDING, RUNNING):
+                tt.state[orig] = DONE
+                tt.finish_s[orig] = finish_s
+                # ``orig`` may itself be a copy (a technique speculated on
+                # a running copy): only true originals carry _job_open
+                if not tt.is_copy[orig]:
+                    self._close_original(orig)
+        else:
+            self._close_original(i)
+        for g in self._copy_groups.get(orig, ()):
+            if tt.state[g] != DONE:
+                tt.state[g] = CANCELLED
+
+    def _close_original(self, i: int) -> None:
+        """Original task i reached a terminal state: update the per-job open
+        count and queue the job for ground-truth accounting at zero."""
+        job = int(self.tasks.job_id[i])
+        left = self._job_open.get(job, 0) - 1
+        self._job_open[job] = left
+        if left == 0 and job not in self.jobs_done:
+            self._jobs_newly_closed.append(job)
 
     # ----------------------- job-level bookkeeping ------------------------
 
     def _update_job_completion(self) -> None:
+        """Ground-truth accounting for jobs whose last original task reached
+        a terminal state this interval (tracked incrementally by
+        ``_close_original`` — no all-jobs/all-tasks rescan)."""
         tt = self.tasks
         k = self.cfg.k
         counts = np.zeros(self.cfg.n_hosts)
-        for job in list(self.job_tasks):
-            if job in self.jobs_done:
-                continue
-            tids = self.job_tasks[job]
-            if any(tt.state[i] in (PENDING, RUNNING) for i in tids):
-                continue
-            times = np.array([max(tt.finish_s[i] - tt.submit_s[i], 1e-3)
-                              for i in tids])
-            hosts = np.array([tt.host[i] for i in tids])
-            a, b = pareto.fit_pareto(times)
-            thr = float(pareto.straggler_threshold(
-                np.asarray(a), np.asarray(b), k))
+        for job in self._jobs_newly_closed:
+            tids = np.asarray(self.job_tasks[job], np.int64)
+            times = np.maximum(tt.finish_s[tids] - tt.submit_s[tids], 1e-3)
+            hosts = tt.host[tids].copy()
+            a, b = pareto.fit_pareto_np(times)
+            thr = float(pareto.straggler_threshold_np(a, b, k))
             strag = times > thr
-            np.add.at(counts, hosts[strag], 1)
+            # a task finished via its copy while unplaced has host == -1;
+            # don't let the wrap-around credit the last host
+            placed = strag & (hosts >= 0)
+            np.add.at(counts, hosts[placed], 1)
             self.jobs_done.add(job)
             self.completed_jobs.append(dict(
                 job=job, t=self.t, times=times, straggler=strag,
                 hosts=hosts, deadline=self.job_deadline[job]))
+        self._jobs_newly_closed = []
         decay = 0.8
         self.straggler_ma = decay * self.straggler_ma + (1 - decay) * counts
         self.host_straggler_counts += counts
@@ -353,14 +395,26 @@ class Simulation:
         job's fitted Pareto threshold once the job completes).
         """
         out = np.zeros(self.t)
+        if self.t == 0 or not self.completed_jobs:
+            return out
         dt = self.cfg.interval_seconds
         tt = self.tasks
-        for rec in self.completed_jobs:
-            tids = self.job_tasks[rec["job"]]
-            for i, is_s in zip(tids, rec["straggler"]):
-                if not is_s:
-                    continue
-                lo = int(tt.submit_s[i] // dt)
-                hi = int(max(tt.finish_s[i], tt.submit_s[i]) // dt)
-                out[lo:min(hi + 1, self.t)] += 1
-        return out
+        tids = np.concatenate(
+            [np.asarray(self.job_tasks[rec["job"]], np.int64)
+             for rec in self.completed_jobs])
+        flags = np.concatenate(
+            [np.asarray(rec["straggler"], bool)
+             for rec in self.completed_jobs])
+        tids = tids[flags]
+        if tids.size == 0:
+            return out
+        # difference-array accumulation over [lo, hi] interval spans
+        lo = (tt.submit_s[tids] // dt).astype(np.int64)
+        hi = (np.maximum(tt.finish_s[tids], tt.submit_s[tids])
+              // dt).astype(np.int64)
+        lo = np.clip(lo, 0, self.t)
+        hi_end = np.clip(np.minimum(hi + 1, self.t), 0, self.t)
+        diff = np.zeros(self.t + 1)
+        np.add.at(diff, lo, 1.0)
+        np.add.at(diff, hi_end, -1.0)
+        return np.cumsum(diff)[:self.t]

@@ -22,7 +22,7 @@ MIN_OBS_INTERVALS = 2  # reactive methods need some progress history
 
 
 def _expected_time(sim, i) -> float:
-    return float(sim.tasks.work[i] / sim.cfg.host_ips)
+    return float(sim.tasks.work[i] / sim.cfg.host_ips_mean)
 
 
 def _elapsed(sim, i) -> float:
@@ -70,7 +70,7 @@ class NearestFit(E.Technique):
 
     def _predict(self, work: float) -> float:
         if self.coef is None:
-            return work / self.sim.cfg.host_ips
+            return work / self.sim.cfg.host_ips_mean
         return float(np.exp(self.coef[0] + self.coef[1] * np.log(work)))
 
     def on_interval(self):
@@ -326,7 +326,7 @@ class IGRUSD(E.Technique):
         exp = max(_expected_time(sim, i), 1.0)
         return np.array([
             float(tt.progress[i] / max(tt.work[i], 1e-9)),
-            float(tt.progress[i] / el / sim.cfg.host_ips),
+            float(tt.progress[i] / el / sim.cfg.host_ips_mean),
             float(el / exp)], np.float32)
 
     def on_interval(self):
@@ -379,10 +379,10 @@ def pretrain_igru(tech: IGRUSD, sim_done: E.Simulation,
     for i in done:
         i = int(i)
         total = float(tt.finish_s[i] - tt.start_s[i])
-        exp = float(tt.work[i] / sim_done.cfg.host_ips)
+        exp = float(tt.work[i] / sim_done.cfg.host_ips_mean)
         # reconstruct an idealized progress history at the observed rate
         frac = np.linspace(0.15, 0.75, IGRUSD.HIST)
-        rate = float(tt.work[i]) / max(total, 1.0) / sim_done.cfg.host_ips
+        rate = float(tt.work[i]) / max(total, 1.0) / sim_done.cfg.host_ips_mean
         el = frac * total
         feats = np.stack([frac, np.full_like(frac, rate), el / exp], 1)
         xs.append(feats)
@@ -406,6 +406,8 @@ def pretrain_wrangler(tech: Wrangler, sim_done: E.Simulation) -> None:
             continue
         util = hist[t]
         for h, s in zip(rec["hosts"], rec["straggler"]):
+            if h < 0:  # finished via a copy while unplaced
+                continue
             feats.append(np.concatenate([util[int(h)],
                                          [speed_n[int(h)]]]))
             labels.append(float(s))

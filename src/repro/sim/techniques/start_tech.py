@@ -151,7 +151,7 @@ class NoOpRecorder(E.Technique):
             x = np.concatenate(
                 [seq.reshape(self.horizon, -1),
                  np.repeat(mt.reshape(1, -1), self.horizon, 0)], axis=-1)
-            a, b = pareto.fit_pareto(rec["times"])
+            a, b = pareto.fit_pareto_np(rec["times"])
             xs.append(x)
             # beta regressed in interval units (predictor beta_scale)
             ys.append([float(a), float(b) / sim.cfg.interval_seconds])

@@ -38,9 +38,17 @@ class WorkloadGenerator:
         day = cfg.n_intervals / 2.0
         self.diurnal = 0.75 + 0.25 * np.sin(2 * np.pi * t / max(day, 1.0))
 
+    def burst_factor(self, t: int) -> float:
+        """Flash-crowd multiplier: burst_multiplier inside burst windows."""
+        cfg = self.cfg
+        if cfg.burst_period > 0 and (t % cfg.burst_period) < cfg.burst_width:
+            return cfg.burst_multiplier
+        return 1.0
+
     def sample_interval(self, t: int) -> JobBatch:
         cfg, rng = self.cfg, self.rng
-        lam = cfg.arrival_rate * self.diurnal[min(t, cfg.n_intervals - 1)]
+        lam = (cfg.arrival_rate * self.diurnal[min(t, cfg.n_intervals - 1)]
+               * self.burst_factor(t))
         n_jobs = rng.poisson(lam)
         ids, reqs, works, dls, isdl, w = [], [], [], [], [], []
         for _ in range(n_jobs):
@@ -60,12 +68,12 @@ class WorkloadGenerator:
             body = rng.normal(cfg.work_mean, cfg.work_std, q)
             tail = cfg.work_mean * (
                 rng.pareto(cfg.work_pareto_tail, q) + 1.0)
-            heavy = rng.random(q) < 0.15
+            heavy = rng.random(q) < cfg.heavy_fraction
             work = np.clip(np.where(heavy, tail, body),
                            cfg.work_mean * 0.1, cfg.work_mean * 20)
             # seconds at fleet-average effective speed (~0.6 of nominal:
             # Table-3 mix is dominated by the slow core2duo class)
-            expected = work / (cfg.host_ips * 0.6)
+            expected = work / (cfg.host_ips_mean * 0.6)
             slack = rng.uniform(*cfg.deadline_slack, q)
             ids.append(np.full(q, jid))
             reqs.append(req)

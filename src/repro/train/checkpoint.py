@@ -110,13 +110,15 @@ class AsyncCheckpointer:
     def _run(self):
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            step, tree = item
             try:
+                if item is None:
+                    return
+                step, tree = item
                 save(self.path, step, tree, keep=self.keep)
-            except Exception as e:  # surfaced on next submit/close
+            except Exception as e:  # surfaced on next submit/flush/close
                 self._err = e
+            finally:
+                self._q.task_done()
 
     def submit(self, step: int, tree) -> None:
         if self._err:
@@ -124,6 +126,12 @@ class AsyncCheckpointer:
         host_tree = jax.tree_util.tree_map(
             lambda x: np.asarray(jax.device_get(x)), tree)
         self._q.put((step, host_tree))
+
+    def flush(self) -> None:
+        """Block until every submitted checkpoint is durably on disk."""
+        self._q.join()
+        if self._err:
+            raise self._err
 
     def close(self) -> None:
         self._q.put(None)

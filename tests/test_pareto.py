@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+# hypothesis is optional: conftest.py installs a fixed-example fallback stub
+# when the real package is absent, so collection never hard-errors
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
