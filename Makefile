@@ -1,11 +1,14 @@
-# Tier-1 test lanes + benchmark entry points.
+# Tier-1 test lanes + lint + benchmark entry points.
 
 PY := python
 
-.PHONY: test test-all sweep-bench bench
+.PHONY: test test-all lint sweep-bench bench
 
 test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
+
+lint:  ## ruff lane (configured in ruff.toml; pip install ruff)
+	$(PY) -m ruff check src tests benchmarks examples
 
 test-all:  ## full tier-1 suite (ROADMAP verify command)
 	PYTHONPATH=src $(PY) -m pytest -x -q

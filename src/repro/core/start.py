@@ -59,6 +59,12 @@ class STARTController:
         self._mitigated.discard(job_id)
         self._es_cache.pop(job_id, None)
 
+    def es_total(self, job_ids) -> float:
+        """Sum of the latest per-job E_S predictions over ``job_ids``
+        (jobs never predicted contribute 0) — the controller's aggregate
+        straggler forecast, logged for the Fig. 9 MAPE comparison."""
+        return float(sum(self._es_cache.get(j, 0.0) for j in job_ids))
+
     def _host_seq(self) -> np.ndarray:
         hist = list(self._host_hist)
         while len(hist) < self.horizon:  # left-pad with oldest snapshot

@@ -1,49 +1,53 @@
-"""START applied to distributed training pods (the beyond-paper layer).
+"""Straggler policies applied to distributed training pods (beyond-paper).
 
 In synchronous SPMD training every collective waits for the slowest host,
 so one straggler host taxes the whole step. Prior systems detect this
 reactively (timeout, then restart); START's insight — predict the latency
-*tail* from host+work features with an Encoder-LSTM over a Pareto model —
-transfers directly:
+*tail* from host+work features over a Pareto model — transfers directly.
 
-  M_H  <- per-host telemetry (step time, mem/net utilization, restart count)
-  M_T  <- per-shard work descriptors (microbatches, token counts)
-  E_S  <- expected number of straggler hosts this interval (Eq. 4)
+This module is the pod-side *substrate* of the unified policy API
+(``repro.policy``): it accumulates per-step telemetry, publishes the same
+:class:`~repro.policy.telemetry.TelemetryView` the cloud simulator
+publishes, and executes the unified :class:`~repro.policy.Action`
+vocabulary.  Task-level verbs are translated to pod semantics
+(DESIGN.md §6):
 
-Mitigation (Algorithm 1 mapped to pod semantics — DESIGN.md §6):
-  * SPECULATE -> backup shards: the lowest-MA healthy host also computes
-    the predicted straggler's microbatch; at the gradient reduce a
+  * SPECULATE/CLONE -> backup shards: a healthy host also computes the
+    predicted straggler's microbatch; at the gradient reduce a
     first-done-wins mask keeps exactly one contribution (gradient-exact).
-  * RERUN -> evict-and-remesh: chronic stragglers are dropped at a step
-    boundary; repro.distributed.elastic rebuilds the mesh and state is
-    restored from the latest checkpoint.
+  * RERUN/EVICT -> evict-and-remesh: chronic stragglers are dropped at a
+    step boundary; repro.distributed.elastic rebuilds the mesh and state
+    is restored from the latest checkpoint.
+  * DELAY has no pod analogue and is ignored.
 
-This module is runtime-agnostic: it consumes step-time observations (real
-timers on hardware; simulated Pareto latencies in tests/examples) and
-emits actions. The decision core is the same STARTController the cloud
-simulator uses — one model, two substrates.
+Because both substrates speak one view/action vocabulary, cloud baselines
+port over: ``StragglerRuntime(cfg, policy=IGRUSD())`` runs the paper's
+IGRU-SD baseline on a training pod (see ``pretrain_igru_pod``).  The pod
+maps each host's current *horizon-step window* to one synthetic "task":
+all hosts complete the same shard work per step (synchronous SPMD), so
+progress advances uniformly while per-host elapsed time carries the
+slowdown — exactly the progress/elapsed/expected geometry the cloud
+policies reason about.
+
+The default policy, :class:`StartPodPolicy`, is START's Algorithm 1
+mapped to pod semantics: E_S (Eq. 4) from the fitted step-time tail
+sizes the speculative backup set, chronic stragglers are evicted.
 """
 from __future__ import annotations
 
 import dataclasses
-import enum
+import math
 
 import numpy as np
 
-from repro.core import features, pareto
-from repro.core.predictor import StragglerPredictor
+from repro.core import pareto
+from repro.policy import (Action, ActionKind, EVENT_INTERVAL, Policy,
+                          TelemetryView, host_action, register)
+from repro.policy.telemetry import (CANCELLED, RUNNING, HostTelemetry,
+                                    JobTelemetry, TaskTelemetry, readonly)
 
-
-class ActionKind(enum.Enum):
-    BACKUP_SHARD = "backup_shard"   # speculation analogue
-    EVICT = "evict"                 # re-run analogue (remesh without host)
-
-
-@dataclasses.dataclass(frozen=True)
-class HostAction:
-    kind: ActionKind
-    host: int
-    backup: int | None = None       # host that also computes the shard
+#: legacy constructor name: a host-level Action (kind, host, backup=...)
+HostAction = host_action
 
 
 @dataclasses.dataclass
@@ -55,100 +59,286 @@ class RuntimeConfig:
     ma_decay: float = 0.8
     seed: int = 0
 
+    #: the pod's normalized clock: fleet-median step time == 1.0 "second"
+    #: of work at unit speed, so policy-side expected-time math holds
+    host_ips_mean: float = 1.0
+    max_tasks: int = 1
+
+
+def fitted_tail(step_times: list, horizon: int) -> tuple[float, float]:
+    """MLE Pareto fit over the recent per-host step times."""
+    recent = np.concatenate(step_times[-horizon:])
+    recent = recent[recent > 0]
+    a, b = pareto.fit_pareto(np.asarray(recent, np.float32))
+    return float(a), float(b)
+
+
+def expected_stragglers(step_times: list, n_hosts: int, k: float,
+                        horizon: int) -> float:
+    """E_S (Eq. 4) from the fitted step-time tail."""
+    if not step_times:
+        return 0.0
+    a, b = fitted_tail(step_times, horizon)
+    return float(pareto.expected_stragglers(float(n_hosts), a, b, k))
+
+
+@register("start-pod", substrates=("pod",),
+          description="START's Algorithm 1 on pod semantics: Pareto-tail "
+                      "E_S sizes the backup-shard set, chronic stragglers "
+                      "are evicted")
+class StartPodPolicy(Policy):
+    """Algorithm 1 per training interval.
+
+    Chronic stragglers are evicted unconditionally (a host that is slow
+    ``evict_after`` intervals in a row delays every step regardless of
+    the tail estimate); E_S sizes the *speculative* backup set, exactly
+    as floor(E_S) sizes the mitigation set in the paper.  All state it
+    reads comes from the runtime's TelemetryView: raw step times under
+    ``view.extra``, the straggler moving average as
+    ``view.straggler_ma``, eviction status as host downtime.
+    """
+
+    name = "start-pod"
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        cfg = view.config
+        step_times = view.extra.get("step_times", ())
+        if not step_times:
+            return []
+        online = view.hosts.online()
+        chronic = view.extra["chronic"]
+        actions: list[Action] = []
+        evicting: set[int] = set()
+        for h in np.nonzero(chronic >= cfg.evict_after)[0]:
+            h = int(h)
+            if online[h]:
+                actions.append(host_action(ActionKind.EVICT, h))
+                evicting.add(h)
+        e_s = expected_stragglers(step_times, cfg.n_hosts, cfg.k,
+                                  cfg.horizon)
+        n_mit = int(math.floor(e_s))
+        if n_mit <= 0:
+            return actions
+        last = step_times[-1]
+        order = np.argsort(-last)  # slowest first
+        healthy = [int(h) for h in np.argsort(view.straggler_ma)
+                   if online[h] and int(h) not in evicting]
+        hi = 0
+        acted = {a.host for a in actions}
+        for h in order[:n_mit]:
+            h = int(h)
+            if not online[h] or h in evicting or h in acted:
+                continue
+            while hi < len(healthy) and healthy[hi] == h:
+                hi += 1
+            backup = healthy[hi % len(healthy)] if healthy else h
+            hi += 1
+            actions.append(host_action(ActionKind.BACKUP_SHARD, h,
+                                       backup=backup))
+        return actions
+
 
 class StragglerRuntime:
-    """Per-step telemetry in, mitigation actions out."""
+    """Per-step telemetry in, mitigation actions out.
 
-    def __init__(self, cfg: RuntimeConfig):
+    Runtime-agnostic: it consumes step-time observations (real timers on
+    hardware; simulated Pareto latencies in tests/examples), publishes a
+    :class:`TelemetryView`, and executes whatever registered pod policy
+    it was built with — :class:`StartPodPolicy` by default.
+    """
+
+    def __init__(self, cfg: RuntimeConfig, policy: Policy | None = None):
         self.cfg = cfg
-        self.predictor = StragglerPredictor(
-            n_hosts=cfg.n_hosts, max_tasks=cfg.n_hosts, k=cfg.k,
-            horizon=cfg.horizon, seed=cfg.seed)
-        self.hist: list[np.ndarray] = []      # per-interval host features
+        self.policy = policy if policy is not None else StartPodPolicy()
+        self.t = 0                            # observed steps
         self.step_times: list[np.ndarray] = []
         self.chronic = np.zeros(cfg.n_hosts, np.int64)
         self.ma = np.zeros(cfg.n_hosts)
         self.evicted: set[int] = set()
+        self.util_history: list[np.ndarray] = []   # (n_hosts, 4) per step
+        self.completed_windows: list[dict] = []
+        self._util = np.zeros((cfg.n_hosts, 4))
+        self._win_elapsed = np.zeros(cfg.n_hosts)  # normalized seconds
+        self._win_steps = 0
 
     # ------------------------------ telemetry ------------------------------
 
     def observe_step(self, step_times_s: np.ndarray,
                      mem_util: np.ndarray | None = None,
                      net_util: np.ndarray | None = None) -> None:
-        n = self.cfg.n_hosts
+        cfg = self.cfg
+        n = cfg.n_hosts
         st = np.asarray(step_times_s, float)
         self.step_times.append(st)
         med = np.median(st[st > 0]) if (st > 0).any() else 1.0
         rel = st / max(med, 1e-9)
         mem = mem_util if mem_util is not None else np.zeros(n)
         net = net_util if net_util is not None else np.zeros(n)
-        m_h = np.asarray(features.host_matrix(
-            util=np.stack([np.clip(rel - 1, 0, 2), mem, net,
-                           np.zeros(n)], 1),
-            cap=np.ones((n, 4)), cost=np.ones(n), power_max=np.ones(n),
-            n_tasks=np.ones(n)))
-        self.hist.append(m_h)
-        self.ma = self.cfg.ma_decay * self.ma \
-            + (1 - self.cfg.ma_decay) * (rel > self.cfg.k)
-        self.chronic = np.where(rel > self.cfg.k, self.chronic + 1, 0)
+        self._util = np.stack([np.clip(rel - 1, 0, 2), mem, net,
+                               np.zeros(n)], 1)
+        self.util_history.append(self._util)
+        self.ma = cfg.ma_decay * self.ma + (1 - cfg.ma_decay) \
+            * (rel > cfg.k)
+        self.chronic = np.where(rel > cfg.k, self.chronic + 1, 0)
+        self.t += 1
+        # window clock: each step advances the normalized clock by 1.0;
+        # a host's window-elapsed accrues its *relative* slowdown
+        self._win_elapsed = self._win_elapsed + rel
+        self._win_steps += 1
+        if self._win_steps >= cfg.horizon:
+            self.completed_windows.append(dict(
+                job=len(self.completed_windows), t=self.t,
+                times=self._win_elapsed.copy(),
+                straggler=self._win_elapsed > cfg.k * cfg.horizon,
+                hosts=np.arange(n), deadline=True))
+            self._win_elapsed = np.zeros(n)
+            self._win_steps = 0
+            # the per-host task ids now denote a NEW window: per-task
+            # policy state (histories, once-only flags) must not carry
+            # over, or a chronic straggler gets mitigated once per run
+            self.policy.forget_tasks(range(n))
+        self.policy.observe(self.snapshot())
+
+    # ------------------------------- the view ------------------------------
+
+    def snapshot(self) -> TelemetryView:
+        """Publish pod state in the unified telemetry geometry.
+
+        One synthetic task per host — host h's current horizon-step
+        window: ``work``/``progress`` advance one normalized unit per
+        step for every host (synchronous SPMD: everyone finishes every
+        step), while ``start_s`` is back-dated so ``now_s - start_s``
+        equals the host's *relative* elapsed time — slow hosts age
+        faster than they progress, which is precisely the straggler
+        signal task-level policies key on.
+        """
+        cfg = self.cfg
+        n = cfg.n_hosts
+        now = float(self.t)
+        evicted_arr = np.zeros(n, np.int64)
+        if self.evicted:
+            evicted_arr[list(self.evicted)] = np.iinfo(np.int64).max // 2
+        w = float(self._win_steps)
+        state = np.where(evicted_arr > 0, CANCELLED, RUNNING) \
+            .astype(np.int8)
+        tasks = TaskTelemetry(
+            n=n,
+            job_id=readonly(np.zeros(n, np.int64)),
+            state=readonly(state),
+            host=readonly(np.arange(n, dtype=np.int64)),
+            work=readonly(np.full(n, float(cfg.horizon))),
+            progress=readonly(np.full(n, w)),
+            submit_s=readonly(now - self._win_elapsed),
+            start_s=readonly(now - self._win_elapsed),
+            finish_s=readonly(np.full(n, -1.0)),
+            deadline_s=readonly(np.full(n, 2.0 * cfg.horizon)),
+            is_deadline=readonly(np.ones(n, bool)),
+            sla_weight=readonly(np.ones(n)),
+            restarts=readonly(self.chronic),
+            is_copy=readonly(np.zeros(n, bool)),
+            orig=readonly(np.full(n, -1, np.int64)),
+            delayed_until=readonly(np.zeros(n, np.int64)),
+            req=readonly(np.zeros((n, 4))))
+        ones = np.ones(n)
+        hosts = HostTelemetry(
+            util=readonly(self._util), speed=readonly(ones),
+            cap=readonly(np.ones((n, 4))), cost=readonly(ones),
+            power_max=readonly(ones), power_min=readonly(ones),
+            n_tasks=readonly(np.ones(n, np.int64)),
+            downtime=readonly(evicted_arr), ips=readonly(ones))
+        jobs = JobTelemetry(
+            tasks={0: list(range(n))}, deadline={0: True},
+            _open={0: int((state == RUNNING).sum())}, _done=set(),
+            _state=state)
+        return TelemetryView(
+            event=EVENT_INTERVAL, t=self.t, now_s=now,
+            interval_seconds=1.0, config=cfg, tasks=tasks, hosts=hosts,
+            jobs=jobs, new_tasks=np.zeros(0, np.int64),
+            straggler_ma=readonly(self.ma),
+            completed_jobs=self.completed_windows,
+            util_history=self.util_history,
+            extra={"step_times": self.step_times,
+                   "chronic": self.chronic})
 
     # ------------------------------ decision -------------------------------
 
     def fitted_tail(self) -> tuple[float, float]:
-        """MLE Pareto fit over the recent per-host step times."""
-        recent = np.concatenate(self.step_times[-self.cfg.horizon:])
-        recent = recent[recent > 0]
-        a, b = pareto.fit_pareto(np.asarray(recent, np.float32))
-        return float(a), float(b)
+        return fitted_tail(self.step_times, self.cfg.horizon)
 
     def expected_stragglers(self) -> float:
-        """E_S from the *predicted* tail (Encoder-LSTM when trained, MLE
-        fallback before training — same Pareto math either way)."""
-        if not self.step_times:
-            return 0.0
-        a, b = self.fitted_tail()
-        return float(pareto.expected_stragglers(
-            float(self.cfg.n_hosts), a, b, self.cfg.k))
+        return expected_stragglers(self.step_times, self.cfg.n_hosts,
+                                   self.cfg.k, self.cfg.horizon)
 
-    def decide(self) -> list[HostAction]:
-        """Algorithm 1 per training interval.
+    def _pick_backup(self, host: int) -> int:
+        order = [int(h) for h in np.argsort(self.ma)
+                 if int(h) != host and int(h) not in self.evicted]
+        return order[0] if order else host
 
-        Chronic stragglers are evicted unconditionally (a host that is slow
-        ``evict_after`` intervals in a row delays every step regardless of
-        the tail estimate); E_S sizes the *speculative* backup set, exactly
-        as floor(E_S) sizes the mitigation set in the paper."""
+    def decide(self) -> list[Action]:
+        """Run the bound policy and execute/translate its actions.
+
+        Host-level actions pass through; task-level actions are mapped
+        onto their hosts (speculate/clone -> backup shard, rerun ->
+        evict, delay -> dropped).  At most one action per host per step;
+        evictions update the runtime's membership bookkeeping.
+        """
         if not self.step_times:
             return []
-        actions: list[HostAction] = []
-        for h in np.nonzero(self.chronic >= self.cfg.evict_after)[0]:
-            h = int(h)
-            if h not in self.evicted:
-                actions.append(HostAction(ActionKind.EVICT, h))
-                self.evicted.add(h)
-        e_s = self.expected_stragglers()
-        n_mit = int(np.floor(e_s))
-        if n_mit <= 0:
-            return actions
-        last = self.step_times[-1]
-        order = np.argsort(-last)  # slowest first
-        healthy = [int(h) for h in np.argsort(self.ma)
-                   if h not in self.evicted]
-        hi = 0
-        acted = {a.host for a in actions}
-        for h in order[:n_mit]:
-            h = int(h)
+        view = self.snapshot()
+        out: list[Action] = []
+        acted: set[int] = set()
+        for a in self.policy.decide(view):
+            kind = ActionKind(a.kind)
+            backup = a.backup
+            if kind in (ActionKind.BACKUP_SHARD, ActionKind.EVICT):
+                h = int(a.host)
+            elif kind in (ActionKind.SPECULATE, ActionKind.CLONE):
+                h, kind = int(view.tasks.host[a.task]), \
+                    ActionKind.BACKUP_SHARD
+            elif kind is ActionKind.RERUN:
+                h, kind = int(view.tasks.host[a.task]), ActionKind.EVICT
+            else:                      # DELAY: no pod analogue
+                continue
             if h in self.evicted or h in acted:
                 continue
-            while hi < len(healthy) and healthy[hi] == h:
-                hi += 1
-            backup = healthy[hi % len(healthy)] if healthy else h
-            hi += 1
-            actions.append(HostAction(ActionKind.BACKUP_SHARD, h,
-                                      backup=backup))
-        return actions
+            acted.add(h)
+            if kind is ActionKind.EVICT:
+                self.evicted.add(h)
+                out.append(host_action(ActionKind.EVICT, h))
+            else:
+                if backup is None or backup == h \
+                        or backup in self.evicted:
+                    backup = self._pick_backup(h)
+                out.append(host_action(ActionKind.BACKUP_SHARD, h,
+                                       backup=backup))
+        return out
 
 
-def backup_mask(n_hosts: int, actions: list[HostAction],
+def pretrain_igru_pod(tech, runtime: StragglerRuntime,
+                      epochs: int = 200) -> None:
+    """Fit an IGRU-SD policy's GRU on the pod's completed step windows.
+
+    Reuses the cloud pretrainer's idealized-history reconstruction: each
+    (host, window) pair is a task that took ``window_elapsed`` normalized
+    seconds against ``horizon`` expected — the same
+    completion/expected-ratio regression, sourced from pod telemetry.
+    """
+    from repro.sim.techniques.baselines import synthetic_progress_history
+
+    horizon = float(runtime.cfg.horizon)
+    xs, ys = [], []
+    for rec in runtime.completed_windows:
+        for total in rec["times"]:
+            total = float(total)
+            xs.append(synthetic_progress_history(
+                horizon, total, horizon, 1.0))
+            ys.append(total / horizon)
+    if xs:
+        tech.train(np.stack(xs, axis=1).astype(np.float32),
+                   np.array(ys, np.float32), epochs=epochs)
+
+
+def backup_mask(n_hosts: int, actions: list[Action],
                 finished_in_time: np.ndarray) -> np.ndarray:
     """First-done-wins combine weights for the gradient reduce.
 
@@ -158,7 +348,8 @@ def backup_mask(n_hosts: int, actions: list[HostAction],
     """
     w = np.asarray(finished_in_time, float).copy()
     for a in actions:
-        if a.kind is ActionKind.BACKUP_SHARD and a.backup is not None:
+        if ActionKind(a.kind) is ActionKind.BACKUP_SHARD \
+                and a.backup is not None:
             if not finished_in_time[a.host]:
                 w[a.host] = 0.0  # backup host contributes this shard
     return w

@@ -44,7 +44,8 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, sm_scale: float | None = None,
                   kv_len: int | None = None,
                   chunk_q: int | None = 2048) -> jax.Array:
-    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D). fp32 softmax, output q.dtype."""
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D). fp32 softmax,
+    output q.dtype."""
     b, h, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     g = h // hkv

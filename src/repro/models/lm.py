@@ -22,7 +22,6 @@ provided (see models/moe.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

@@ -10,7 +10,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.mamba_scan.ref import mamba_scan_ref
 from repro.models import backend
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.models import backend
 from repro.models.config import ModelConfig
-from repro.models.layers import dense_init, mlp_apply, mlp_init
+from repro.models.layers import mlp_apply, mlp_init
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,78 @@
+"""Unified policy API: one decision seam, two execution substrates.
+
+Straggler techniques are *policies*: they read a frozen
+:class:`TelemetryView` snapshot (tasks, hosts, jobs, clocks — never
+engine internals) and emit :class:`Action`s from one shared vocabulary.
+The cloud simulator (``repro.sim``) and the distributed training runtime
+(``repro.distributed.straggler_runtime``) both publish views and execute
+actions, so a technique written once runs on either substrate.
+
+Worked example — a complete, sweep-ready technique in ~25 lines::
+
+    import numpy as np
+    from repro import policy
+
+    @policy.register(
+        "slow-host-clone",
+        description="clone tasks stuck on hosts below median speed")
+    class SlowHostClone(policy.Policy):
+        def decide(self, view):
+            if view.event != policy.EVENT_INTERVAL:
+                return []          # act once per interval, not at submit
+            eff = view.hosts.effective_speed()
+            slow = eff < np.median(eff[view.hosts.online()])
+            acts = []
+            for i in np.nonzero(view.tasks.active_mask())[0][:8]:
+                if slow[view.tasks.host[i]] and not view.tasks.is_copy[i]:
+                    acts.append(policy.Action(
+                        policy.ActionKind.SPECULATE, task=int(i),
+                        target=int(np.argmax(eff))))
+            return acts
+
+    # the registry makes it a first-class technique everywhere:
+    from repro.sim import sweep
+    res = sweep.run(sweep.SweepSpec(
+        techniques=("none", "slow-host-clone"), seeds=(0, 1),
+        scenarios=("planetlab", "heavy-tail")))
+
+Policies that need offline training implement the
+:class:`Pretrainable` protocol — a ``pretrain(ctx)`` classmethod —
+and the registry entry carries it, so sweep runners pretrain (and cache
+per process) without knowing any technique by name::
+
+    @policy.register("learned", epochs_knob="pretrain_epochs")
+    class Learned(policy.Policy):
+        def __init__(self, model=None):
+            self.model = model
+
+        @classmethod
+        def pretrain(cls, ctx):
+            warm = ctx.warmup()          # finished warmup TelemetryView
+            model = fit(warm.completed_jobs, epochs=ctx.epochs or 10)
+            return cls(model=model)
+"""
+from repro.policy.actions import (Action, ActionKind, HOST_KINDS,
+                                  TASK_KINDS, host_action)
+from repro.policy.base import Policy, Pretrainable
+from repro.policy import registry
+from repro.policy.registry import (PolicyEntry, PretrainContext,
+                                   PretrainSpec, UnknownPolicyError,
+                                   get, make, names, register,
+                                   unregister, validate)
+from repro.policy.telemetry import (CANCELLED, DONE, EVENT_INTERVAL,
+                                    EVENT_SUBMIT, PENDING, RUNNING,
+                                    HostTelemetry, JobTelemetry,
+                                    TaskTelemetry, TelemetryView,
+                                    effective_speed, readonly)
+
+__all__ = [
+    "Action", "ActionKind", "HOST_KINDS", "TASK_KINDS", "host_action",
+    "Policy", "Pretrainable",
+    "PolicyEntry", "PretrainContext", "PretrainSpec",
+    "UnknownPolicyError", "get", "make", "names", "register",
+    "unregister", "validate", "registry",
+    "PENDING", "RUNNING", "DONE", "CANCELLED",
+    "EVENT_SUBMIT", "EVENT_INTERVAL",
+    "TaskTelemetry", "HostTelemetry", "JobTelemetry", "TelemetryView",
+    "effective_speed", "readonly",
+]

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import Model
-from repro.models.specs import batch_specs
 from repro.serve.kv_cache import SlotManager, pad_to_length
 
 

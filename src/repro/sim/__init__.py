@@ -1,4 +1,5 @@
-"""CloudSim-analogue simulator: the paper's evaluation substrate in JAX/numpy."""
+"""CloudSim-analogue simulator: the paper's evaluation substrate
+in JAX/numpy."""
 from repro.sim.config import SimConfig, small
 from repro.sim.engine import NoMitigation, SimAction, Simulation, Technique
 

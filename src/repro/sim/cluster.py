@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.policy.telemetry import effective_speed as _effective_speed
 from repro.sim.config import HOST_TYPES, SimConfig
 
 RES = ("cpu", "ram", "disk", "bw")
@@ -70,15 +71,11 @@ class Cluster:
             np.add.at(self.n_tasks, hosts, 1)
 
     def effective_speed(self) -> np.ndarray:
-        """Per-host progress rate: base speed, degraded by (a) CPU overload
-        (processor sharing: capacity_share = 1/overload), (b) interference
-        once any resource runs hot (>70% — cache/IO contention, the paper's
-        'resource contention is the main reason for stragglers'), and zero
-        while the host is down."""
-        over = np.maximum(self.util[:, 0], 1.0)
-        hot = np.clip((self.util.max(axis=1) - 0.7) / 0.3, 0.0, 1.0)
-        interference = 1.0 - 0.4 * hot
-        return np.where(self.online(), self.speed * interference / over, 0.0)
+        """Per-host progress rate (the paper's 'resource contention is
+        the main reason for stragglers').  The formula lives in
+        ``repro.policy.telemetry.effective_speed`` so policy-side host
+        views compute the identical quantity."""
+        return _effective_speed(self.util, self.speed, self.online())
 
     def overloaded(self) -> np.ndarray:
         """(n, N_RES) bool: any resource demanded above capacity."""

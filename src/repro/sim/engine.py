@@ -2,28 +2,37 @@
 
 Semantics per scheduling interval (300 s):
   1. host downtimes tick down; new jobs arrive (Poisson);
-  2. the bound straggler Technique sees submissions (clone/delay hooks);
+  2. the bound Policy sees a submit-time TelemetryView (clone/delay);
   3. pending tasks are placed by the shared scheduler (VM-creation faults
      bounce placements);
   4. Weibull fault events fire (host downtime -> resident tasks restart;
      cloudlet faults -> task restarts);
-  5. the Technique's interval hook emits speculate/rerun actions;
+  5. the Policy observes an interval TelemetryView and decides
+     speculate/rerun actions;
   6. tasks progress at host effective speed (contention + heterogeneity);
      completions are interpolated within the interval;
   7. metrics are recorded; completed jobs update per-host straggler
      moving averages (ground truth via per-job Pareto-K threshold).
+
+Policies never touch ``sim.tasks``/``sim.cluster`` directly: the
+``Simulation.snapshot()`` view (``repro.policy.telemetry``) is the only
+state they read, and ``repro.policy.Action`` the only way they act.
 
 Speculative copies are first-result-wins: whichever of {original, copy}
 finishes first completes the logical task and cancels the others.
 """
 from __future__ import annotations
 
-import dataclasses
 import time as _time
 
 import numpy as np
 
 from repro.core import pareto
+from repro.policy import (Action, Policy, TelemetryView,
+                          EVENT_INTERVAL, EVENT_SUBMIT)
+from repro.policy.telemetry import (CANCELLED, DONE, PENDING, RUNNING,
+                                    HostTelemetry, JobTelemetry,
+                                    make_task_telemetry, readonly)
 from repro.sim import metrics as M
 from repro.sim.cluster import Cluster
 from repro.sim.config import SimConfig
@@ -31,7 +40,8 @@ from repro.sim.faults import FaultInjector, FaultKind
 from repro.sim.scheduler import Scheduler, UtilizationAwareScheduler
 from repro.sim.workload import WorkloadGenerator
 
-PENDING, RUNNING, DONE, CANCELLED = 0, 1, 2, 3
+__all__ = ["PENDING", "RUNNING", "DONE", "CANCELLED", "TaskTable",
+           "SimAction", "Technique", "NoMitigation", "Simulation"]
 
 
 class TaskTable:
@@ -91,31 +101,37 @@ class TaskTable:
         return getattr(self, field)[:self.n]
 
 
-@dataclasses.dataclass
-class SimAction:
-    kind: str              # speculate | rerun | delay | clone
-    task: int
-    target: int | None = None
-    delay: int = 1
-    n_clones: int = 1
+#: the simulator's historical action type — now the unified vocabulary.
+#: ``SimAction("clone", i, n_clones=2)`` keeps constructing as before.
+SimAction = Action
 
 
-class Technique:
-    """Base class for straggler prediction/mitigation techniques."""
+class Technique(Policy):
+    """Legacy adapter for engine-coupled techniques.
+
+    New policies subclass :class:`repro.policy.Policy` and consume only
+    the :class:`TelemetryView`; this adapter keeps the old
+    ``bind(sim)`` / ``on_submit`` / ``on_interval`` surface working for
+    existing subclasses (tests, ad-hoc drills) by translating the
+    policy-protocol calls back into the old hooks.
+    """
 
     name = "none"
+    sim: "Simulation"
 
     def bind(self, sim: "Simulation") -> None:
         self.sim = sim
 
-    def on_submit(self, new_idx: np.ndarray) -> list[SimAction]:
+    def on_submit(self, new_idx: np.ndarray) -> list[Action]:
         return []
 
-    def on_interval(self) -> list[SimAction]:
+    def on_interval(self) -> list[Action]:
         return []
 
-    def predicted_straggler_count(self) -> float | None:
-        return None
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event == EVENT_SUBMIT:
+            return self.on_submit(view.new_tasks)
+        return self.on_interval()
 
 
 class NoMitigation(Technique):
@@ -123,7 +139,7 @@ class NoMitigation(Technique):
 
 
 class Simulation:
-    def __init__(self, cfg: SimConfig, technique: Technique | None = None,
+    def __init__(self, cfg: SimConfig, technique: Policy | None = None,
                  scheduler: Scheduler | None = None):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
@@ -132,7 +148,8 @@ class Simulation:
         self.faults = FaultInjector(cfg, self.rng)
         self.scheduler = scheduler or UtilizationAwareScheduler()
         self.technique = technique or NoMitigation()
-        self.technique.bind(self)
+        if hasattr(self.technique, "bind"):  # legacy Technique subclasses
+            self.technique.bind(self)
         self.tasks = TaskTable()
         self.log = M.MetricsLog()
         self.t = 0  # current interval index
@@ -168,6 +185,40 @@ class Simulation:
     def job_incomplete_tasks(self, job: int) -> list[int]:
         return [i for i in self.job_tasks[job]
                 if self.tasks.state[i] in (PENDING, RUNNING)]
+
+    def snapshot(self, event: str = EVENT_INTERVAL,
+                 new_tasks: np.ndarray | None = None) -> TelemetryView:
+        """Publish the policy-facing telemetry view (paper M_H/M_T inputs
+        plus clocks and the job index).
+
+        Zero-copy: every array is a read-only numpy view onto live engine
+        buffers, so the view reflects engine state *at the moment a
+        policy reads it* and is only valid for the current hook call.
+        """
+        tt, c = self.tasks, self.cluster
+        return TelemetryView(
+            event=event, t=self.t, now_s=self.now_s,
+            interval_seconds=self.cfg.interval_seconds, config=self.cfg,
+            tasks=make_task_telemetry(tt.n, tt.view, tt.req[:tt.n]),
+            hosts=HostTelemetry(
+                util=readonly(c.util), speed=readonly(c.speed),
+                cap=readonly(c.cap), cost=readonly(c.cost),
+                power_max=readonly(c.power_max),
+                power_min=readonly(c.power_min),
+                n_tasks=readonly(c.n_tasks),
+                downtime=readonly(c.downtime),
+                ips=readonly(self.host_ips)),
+            jobs=JobTelemetry(
+                tasks=self.job_tasks, deadline=self.job_deadline,
+                _open=self._job_open, _done=self.jobs_done,
+                _state=tt.view("state")),
+            new_tasks=(np.asarray(new_tasks, np.int64)
+                       if new_tasks is not None
+                       else np.zeros(0, np.int64)),
+            straggler_ma=readonly(self.straggler_ma),
+            completed_jobs=self.completed_jobs,
+            util_history=self.util_history,
+            rng=self.rng)
 
     def _place(self, i: int, forced: int | None = None) -> None:
         """Place task i (VM-creation faults bounce to rescheduling)."""
@@ -205,9 +256,10 @@ class Simulation:
         for jid, dl in zip(batch.job_ids, batch.is_deadline):
             self.job_deadline[int(jid)] = bool(dl)
 
-        # 2. technique submission hook (clone / delay)
+        # 2. policy submit-time decision point (clone / delay)
         t0 = _time.perf_counter()
-        for act in self.technique.on_submit(new_idx):
+        for act in self.technique.decide(self.snapshot(EVENT_SUBMIT,
+                                                       new_idx)):
             self._apply(act)
         submit_overhead = _time.perf_counter() - t0
 
@@ -240,9 +292,13 @@ class Simulation:
             if f:
                 self._restart(int(i))
 
-        # 5. technique interval hook (speculate / rerun)
+        # 5. policy interval decision point (speculate / rerun): one view
+        # feeds telemetry ingestion and the decision — same state, built
+        # zero-copy once
         t0 = _time.perf_counter()
-        for act in self.technique.on_interval():
+        view = self.snapshot(EVENT_INTERVAL)
+        self.technique.observe(view)
+        for act in self.technique.decide(view):
             self._apply(act)
         predicted = self.technique.predicted_straggler_count()
         interval_overhead = _time.perf_counter() - t0 + submit_overhead

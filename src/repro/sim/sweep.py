@@ -17,7 +17,8 @@ Design notes:
     from scratch inside ``run_cell`` — a pure function of the spec — so a
     parallel sweep is bitwise-equal to a serial one (modulo the wall-clock
     ``avg_overhead_s``/``wall_s`` timing fields);
-  * techniques that need pretraining (start, igru-sd, wrangler) are
+  * techniques that declare pretraining (their registry entry carries a
+    ``PretrainSpec`` — no technique is special-cased by name here) are
     pretrained once per (technique, base-config) per process with fixed
     seeds (7 train / 9 warmup, matching benchmarks) and cached as pickled
     bytes; every cell deserializes a fresh instance, so no mutable technique
@@ -35,9 +36,10 @@ import time
 
 import numpy as np
 
+from repro.policy import Policy, PretrainContext
 from repro.sim import scenarios as S
 from repro.sim.config import SimConfig
-from repro.sim.engine import Simulation, Technique
+from repro.sim.engine import Simulation
 
 QOS_KEYS = ("avg_execution_time_s", "resource_contention", "energy_kwh",
             "sla_violation_rate", "cpu_util_pct", "ram_util_pct",
@@ -71,6 +73,10 @@ class SweepSpec:
     csv_prefix: str = "sweep"
     pretrain_epochs: int = 8        # START encoder-LSTM pretraining epochs
     igru_epochs: int = 40           # IGRU-SD warmup-fit epochs
+    # extra ((knob, value), ...) pairs for third-party Pretrainable
+    # policies whose registry entry names an ``epochs_knob`` other than
+    # the two built-ins above (a dict is accepted, like ``overrides``)
+    pretrain_knobs: tuple = ()
     # pretrain on the scenario base config with only dimension-changing
     # overrides (n_hosts/max_tasks, see _PRETRAIN_KEYS) kept — so a sweep
     # over regime/QoS knobs (arrival_rate, reserved_utilization, ...)
@@ -80,12 +86,21 @@ class SweepSpec:
     shared_pretrain: bool = True
 
     def __post_init__(self):
-        if isinstance(self.overrides, dict):  # accept the natural spelling
-            object.__setattr__(self, "overrides",
-                               tuple(self.overrides.items()))
+        for f in ("overrides", "pretrain_knobs"):  # accept dict spelling
+            if isinstance(getattr(self, f), dict):
+                object.__setattr__(self, f,
+                                   tuple(getattr(self, f).items()))
         for f in ("techniques", "seeds", "scenarios", "overrides",
-                  "metrics"):
+                  "metrics", "pretrain_knobs"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
+        # fail fast, before any worker is spawned: an unknown technique
+        # (ValueError listing registered names) or scenario (KeyError)
+        # should abort the sweep at spec-construction time
+        from repro import policy
+        import repro.sim.techniques  # noqa: F401  (registers built-ins)
+        policy.validate(self.techniques, substrate="sim")
+        for sc in self.scenarios:
+            S.get(sc)
 
     def cells(self) -> list[tuple[str, str, int]]:
         return [(sc, tech, int(seed)) for sc in self.scenarios
@@ -130,69 +145,72 @@ class CellResult:
 
 # --------------------- technique construction (cached) ---------------------
 
-_PRETRAINED: dict = {}   # (name, base-cfg key) -> pickled technique bytes
-_WARM_SIMS: dict = {}    # base-cfg key -> completed warmup Simulation
+_PRETRAINED: dict = {}   # (name, base-cfg key[, epochs]) -> pickled policy
+_WARM_VIEWS: dict = {}   # base-cfg key -> finished warmup TelemetryView
 
 
 def _base_key(cfg: SimConfig):
     return dataclasses.astuple(dataclasses.replace(cfg, seed=0))
 
 
-def _warm_sim(cfg: SimConfig) -> Simulation:
+def _warm_view(cfg: SimConfig):
+    """Finished warmup run (seed 9) as a policy TelemetryView."""
     key = _base_key(cfg)
-    if key not in _WARM_SIMS:
-        # keep at most one completed warmup sim resident: IGRU-SD and
-        # Wrangler consume the same one back-to-back per base config, and
-        # a full Simulation (task table + util history) is too heavy to
-        # accumulate per distinct config in a long-lived process
-        _WARM_SIMS.clear()
+    if key not in _WARM_VIEWS:
+        # keep at most one warmup resident: pretrained techniques consume
+        # the same one back-to-back per base config, and the view pins a
+        # full Simulation's buffers — too heavy to accumulate per distinct
+        # config in a long-lived process
+        _WARM_VIEWS.clear()
         warm = Simulation(dataclasses.replace(cfg, seed=9))
         warm.run()
-        _WARM_SIMS[key] = warm
-    return _WARM_SIMS[key]
+        _WARM_VIEWS[key] = warm.snapshot()
+    return _WARM_VIEWS[key]
 
 
 def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
                    pretrain_epochs: int = 8,
-                   igru_epochs: int = 40) -> Technique:
+                   igru_epochs: int = 40,
+                   extra_knobs: dict | None = None) -> Policy:
     """Fresh technique instance for one cell.
 
-    Pretrained techniques are trained once per (name, base config) per
-    process on fixed seeds (7 train / 9 warmup) and cached pickled; other
-    techniques are built directly. ``pretrain_cfg`` decouples the training
-    environment from the cell config (shared-pretrain sweeps). Always
-    returns a NEW object — safe to bind to a Simulation.
+    Dispatch is fully generic: the registry entry says whether (and how)
+    a technique pretrains — ``entry.pretrain.fn`` builds the trained
+    instance, ``entry.pretrain.epochs_knob`` names which epoch knob
+    feeds it (one of this function's two built-in keywords, or a key in
+    ``extra_knobs`` — SweepSpec's ``pretrain_knobs``; an undeclared knob
+    raises rather than silently training at a default).  Trained
+    policies are cached pickled per (name, base config[, epochs]) per
+    process on fixed seeds (7 train / 9 warmup); every call returns a
+    NEW object — safe to bind to a Simulation.  ``pretrain_cfg``
+    decouples the training environment from the cell config
+    (shared-pretrain sweeps).
     """
-    from repro.sim.techniques import REGISTRY, make
-    from repro.sim.techniques.baselines import (IGRUSD, Wrangler,
-                                                pretrain_igru,
-                                                pretrain_wrangler)
-    from repro.sim.techniques.start_tech import START, pretrain
+    from repro import policy
+    import repro.sim.techniques  # noqa: F401  (registers built-ins)
 
-    if name not in REGISTRY:
-        raise KeyError(f"unknown technique {name!r}; known: "
-                       f"{sorted(REGISTRY)}")
-    needs_pretrain = name in ("start", "igru-sd", "wrangler")
-    if not needs_pretrain:
-        return make(name)
+    entry = policy.registry.get(name)   # ValueError for unknown names
+    if entry.pretrain is None:
+        return entry.factory()
     pcfg = pretrain_cfg if pretrain_cfg is not None else cfg
-    # key on the epoch knob each technique actually consumes, so an
+    # key on the epoch knob the technique actually consumes, so an
     # irrelevant knob changing doesn't evict/duplicate a trained entry
-    epochs = ((pretrain_epochs,) if name == "start"
-              else (igru_epochs,) if name == "igru-sd" else ())
-    key = (name, _base_key(pcfg)) + epochs
+    knobs = {"pretrain_epochs": pretrain_epochs,
+             "igru_epochs": igru_epochs, **(extra_knobs or {})}
+    epochs_knob = entry.pretrain.epochs_knob
+    if epochs_knob is not None and epochs_knob not in knobs:
+        raise ValueError(
+            f"technique {name!r} declares epochs_knob={epochs_knob!r}, "
+            f"which is not a built-in sweep knob ({sorted(knobs)}); pass "
+            f"it via SweepSpec(pretrain_knobs={{{epochs_knob!r}: ...}}) "
+            f"or make_technique(extra_knobs=...)")
+    epochs = knobs.get(epochs_knob)
+    key = (name, _base_key(pcfg)) \
+        + ((epochs,) if epochs_knob else ())
     if key not in _PRETRAINED:
-        if name == "start":
-            ctrl = pretrain(dataclasses.replace(pcfg, seed=7),
-                            epochs=pretrain_epochs, lr=1e-3)
-            tech: Technique = START(controller=ctrl)
-        elif name == "igru-sd":
-            tech = IGRUSD()
-            pretrain_igru(tech, _warm_sim(pcfg), epochs=igru_epochs)
-        else:
-            tech = Wrangler()
-            pretrain_wrangler(tech, _warm_sim(pcfg))
-        _PRETRAINED[key] = pickle.dumps(tech)
+        ctx = PretrainContext(config=pcfg, epochs=epochs,
+                              warmup=lambda: _warm_view(pcfg))
+        _PRETRAINED[key] = pickle.dumps(entry.pretrain.fn(ctx))
     return pickle.loads(_PRETRAINED[key])
 
 
@@ -209,7 +227,8 @@ def run_cell(spec: SweepSpec, scenario: str, technique: str,
         pcfg = spec.pretrain_config(scenario, seed)
     tech = make_technique(technique, cfg, pretrain_cfg=pcfg,
                           pretrain_epochs=spec.pretrain_epochs,
-                          igru_epochs=spec.igru_epochs)
+                          igru_epochs=spec.igru_epochs,
+                          extra_knobs=dict(spec.pretrain_knobs))
     t0 = time.perf_counter()
     sim = Simulation(cfg, technique=tech)
     summary = sim.run()

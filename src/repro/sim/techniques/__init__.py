@@ -1,27 +1,34 @@
-"""Straggler techniques: START + the paper's six baselines (+ RPPS)."""
+"""Straggler techniques: START + the paper's six baselines (+ RPPS).
+
+Every technique is a :class:`repro.policy.Policy` registered with the
+decorator-based registry (``repro.policy.register``); importing this
+package is what populates the registry with the built-ins.  ``REGISTRY``
+and ``make`` are kept as thin compatibility shims over the registry —
+``make`` raises a ``ValueError`` listing the registered names for
+unknown techniques.
+"""
+from repro import policy
 from repro.sim.engine import NoMitigation
 from repro.sim.techniques.baselines import (GRASS, SGC, Dolly, IGRUSD,
                                             NearestFit, Wrangler)
 from repro.sim.techniques.rpps import RPPS
 from repro.sim.techniques.start_tech import START
 
-REGISTRY = {
-    "none": NoMitigation,
-    "start": START,
-    "igru-sd": IGRUSD,
-    "sgc": SGC,
-    "dolly": Dolly,
-    "grass": GRASS,
-    "nearestfit": NearestFit,
-    "wrangler": Wrangler,
-    "rpps": RPPS,
-}
+policy.register("none", description="no straggler mitigation "
+                                    "(control)")(NoMitigation)
+
+#: legacy name -> class mapping (the registry is the source of truth)
+REGISTRY = {name: policy.registry.get(name).factory
+            for name in policy.names("sim")}
 
 BASELINES = ["nearestfit", "dolly", "grass", "sgc", "wrangler", "igru-sd"]
 
 
 def make(name: str, **kw):
-    return REGISTRY[name](**kw)
+    """Instantiate a registered technique; unknown names raise a
+    ``ValueError`` naming every registered technique."""
+    return policy.make(name, **kw)
+
 
 __all__ = ["REGISTRY", "BASELINES", "make", "START", "IGRUSD", "SGC",
            "Dolly", "GRASS", "NearestFit", "Wrangler", "RPPS",

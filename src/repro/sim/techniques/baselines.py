@@ -1,5 +1,6 @@
 """The paper's six baseline techniques (§4.6), implemented per their source
-papers' core rules, sharing the engine's action vocabulary.
+papers' core rules as policies on the unified API: each consumes only the
+``repro.policy`` telemetry view and emits the shared action vocabulary.
 
   NearestFit [6]  — online curve-fit progress profiling -> reactive speculation
   Dolly [20]      — budgeted proactive cloning of small jobs (UCB-gated)
@@ -16,37 +17,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import encoder_lstm as nets
-from repro.sim import engine as E
+from repro.policy import (Action, DONE, EVENT_INTERVAL, EVENT_SUBMIT,
+                          PENDING, Policy, PretrainContext, TelemetryView,
+                          register)
 
 MIN_OBS_INTERVALS = 2  # reactive methods need some progress history
 
 
-def _expected_time(sim, i) -> float:
-    return float(sim.tasks.work[i] / sim.cfg.host_ips_mean)
+def _expected_time(view: TelemetryView, i: int) -> float:
+    return float(view.tasks.work[i] / view.host_ips_mean)
 
 
-def _elapsed(sim, i) -> float:
-    return sim.now_s - float(sim.tasks.start_s[i])
+def _elapsed(view: TelemetryView, i: int) -> float:
+    return view.now_s - float(view.tasks.start_s[i])
 
 
-def _remaining_estimate(sim, i) -> float:
+def _remaining_estimate(view: TelemetryView, i: int) -> float:
     """Remaining seconds at the task's observed progress rate."""
-    tt = sim.tasks
-    el = max(_elapsed(sim, i), 1.0)
+    tt = view.tasks
+    el = max(_elapsed(view, i), 1.0)
     rate = float(tt.progress[i]) / el
     rem = float(tt.work[i] - tt.progress[i])
     return rem / max(rate, 1e-6)
 
 
-def _pick_fast_host(sim, exclude: int) -> int:
-    c = sim.cluster
-    score = np.where(c.online(), c.util[:, 0] - 0.2 * c.speed, np.inf)
+def _pick_fast_host(view: TelemetryView, exclude: int) -> int:
+    h = view.hosts
+    score = np.where(h.online(), h.util[:, 0] - 0.2 * h.speed, np.inf)
     if 0 <= exclude < len(score):
         score[exclude] = np.inf
     return int(np.argmin(score))
 
 
-class NearestFit(E.Technique):
+@register("nearestfit",
+          description="online curve-fit progress profiling with reactive "
+                      "speculation [6]")
+class NearestFit(Policy):
     """Fits t = a + b*x^c on completed (work -> time) pairs; running tasks
     whose elapsed time exceeds 1.5x the fit are stragglers -> speculate."""
 
@@ -68,20 +74,23 @@ class NearestFit(E.Technique):
         sol, *_ = np.linalg.lstsq(A, np.log(t), rcond=None)
         self.coef = sol
 
-    def _predict(self, work: float) -> float:
+    def _predict(self, view: TelemetryView, work: float) -> float:
         if self.coef is None:
-            return work / self.sim.cfg.host_ips_mean
+            return work / view.host_ips_mean
         return float(np.exp(self.coef[0] + self.coef[1] * np.log(work)))
 
-    def on_interval(self):
-        sim = self.sim
-        tt = sim.tasks
-        done = np.nonzero((tt.view("state") == E.DONE)
-                          & ~tt.view("is_copy"))[0]
+    def observe(self, view: TelemetryView) -> None:
+        tt = view.tasks
+        done = np.nonzero((tt.state == DONE) & ~tt.is_copy)[0]
         self.obs_x = [float(tt.work[i]) for i in done][-512:]
         self.obs_t = [float(tt.finish_s[i] - tt.start_s[i])
                       for i in done][-512:]
         self._fit()
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_INTERVAL:
+            return []
+        tt = view.tasks
         acts = []
         cap = max(1, int(0.02 * tt.active_mask().sum()))
         for i in np.nonzero(tt.active_mask())[0]:
@@ -90,17 +99,21 @@ class NearestFit(E.Technique):
                 break
             if i in self._flagged:
                 continue
-            if _elapsed(sim, i) < MIN_OBS_INTERVALS * sim.cfg.interval_seconds:
+            if _elapsed(view, i) < MIN_OBS_INTERVALS * view.interval_seconds:
                 continue
-            if _elapsed(sim, i) > 1.5 * self._predict(float(tt.work[i])):
+            if _elapsed(view, i) > 1.5 * self._predict(view,
+                                                       float(tt.work[i])):
                 self._flagged.add(i)
-                acts.append(E.SimAction(
+                acts.append(Action(
                     "speculate", i, target=_pick_fast_host(
-                        sim, int(tt.host[i]))))
+                        view, int(tt.host[i]))))
         return acts
 
 
-class Dolly(E.Technique):
+@register("dolly",
+          description="budgeted proactive cloning of small jobs, UCB-gated "
+                      "on cluster utilization [20]")
+class Dolly(Policy):
     """Proactive cloning of small jobs within a 5% resource budget, gated by
     an upper-confidence-bound on cluster CPU utilization [20]."""
 
@@ -111,16 +124,17 @@ class Dolly(E.Technique):
         self.small_job = small_job
         self.cloned = 0
 
-    def on_submit(self, new_idx):
-        sim = self.sim
-        tt = sim.tasks
-        total = max(int((~tt.view("is_copy")).sum()), 1)
-        util = sim.cluster.util[:, 0]
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_SUBMIT:
+            return []
+        tt = view.tasks
+        total = max(int((~tt.is_copy).sum()), 1)
+        util = view.hosts.util[:, 0]
         mean, std = float(util.mean()), float(util.std())
         ucb = mean + 1.0 * std
         acts = []
         jobs: dict[int, list[int]] = {}
-        for i in new_idx:
+        for i in view.new_tasks:
             jobs.setdefault(int(tt.job_id[i]), []).append(int(i))
         for job, tids in jobs.items():
             if len(tids) > self.small_job or ucb > 0.8:
@@ -128,12 +142,14 @@ class Dolly(E.Technique):
             if (self.cloned + len(tids)) / total > self.budget:
                 break
             for i in tids:
-                acts.append(E.SimAction("clone", i, n_clones=1))
+                acts.append(Action("clone", i, n_clones=1))
                 self.cloned += 1
         return acts
 
 
-class GRASS(E.Technique):
+@register("grass",
+          description="greedy resource-aware reactive speculation [8]")
+class GRASS(Policy):
     """Greedy speculation: clone the running tasks with the largest
     (current-remaining - fresh-rerun) gain while spare capacity exists [8]."""
 
@@ -143,33 +159,37 @@ class GRASS(E.Technique):
         self.max_spec_frac = max_spec_frac
         self._flagged: set[int] = set()
 
-    def on_interval(self):
-        sim = self.sim
-        tt = sim.tasks
-        spare = float(np.mean(np.clip(1.0 - sim.cluster.util[:, 0], 0, 1)))
-        budget = max(1, int(spare * sim.cfg.n_hosts
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_INTERVAL:
+            return []
+        tt = view.tasks
+        spare = float(np.mean(np.clip(1.0 - view.hosts.util[:, 0], 0, 1)))
+        budget = max(1, int(spare * view.config.n_hosts
                             * self.max_spec_frac * 0.5))
         cands = []
         for i in np.nonzero(tt.active_mask())[0]:
             i = int(i)
             if i in self._flagged:
                 continue
-            if _elapsed(sim, i) < MIN_OBS_INTERVALS * sim.cfg.interval_seconds:
+            if _elapsed(view, i) < MIN_OBS_INTERVALS * view.interval_seconds:
                 continue
-            gain = _remaining_estimate(sim, i) - _expected_time(sim, i)
-            if gain > 2.0 * sim.cfg.interval_seconds:
+            gain = _remaining_estimate(view, i) - _expected_time(view, i)
+            if gain > 2.0 * view.interval_seconds:
                 cands.append((gain, i))
         cands.sort(reverse=True)
         acts = []
         for _, i in cands[:budget]:
             self._flagged.add(i)
-            acts.append(E.SimAction("speculate", i,
-                                    target=_pick_fast_host(
-                                        sim, int(tt.host[i]))))
+            acts.append(Action("speculate", i,
+                               target=_pick_fast_host(
+                                   view, int(tt.host[i]))))
         return acts
 
 
-class SGC(E.Technique):
+@register("sgc",
+          description="pair-wise balanced upfront redundancy (approximate "
+                      "gradient coding) [9]")
+class SGC(Policy):
     """Pair-wise balanced upfront redundancy: each task is duplicated onto
     its paired host with probability p (approximate gradient coding) [9]."""
 
@@ -178,19 +198,24 @@ class SGC(E.Technique):
     def __init__(self, p: float = 0.15):
         self.p = p
 
-    def on_submit(self, new_idx):
-        sim = self.sim
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_SUBMIT:
+            return []
         acts = []
-        n = sim.cfg.n_hosts
-        for i in new_idx:
-            if sim.rng.random() < self.p:
+        n = view.config.n_hosts
+        for i in view.new_tasks:
+            if view.rng.random() < self.p:
                 pair = (int(i) + n // 2) % n
-                acts.append(E.SimAction("clone", int(i), target=pair,
-                                        n_clones=1))
+                acts.append(Action("clone", int(i), target=pair,
+                                   n_clones=1))
         return acts
 
 
-class Wrangler(E.Technique):
+@register("wrangler",
+          description="learned linear straggler probability over host "
+                      "utilization counters; unsafe placements are "
+                      "delayed [17]")
+class Wrangler(Policy):
     """Linear straggler-probability model on host utilization counters with
     a confidence threshold; predicted-unsafe placements are delayed [17]."""
 
@@ -201,6 +226,12 @@ class Wrangler(E.Technique):
         self.max_delay = max_delay
         self.w = None           # ridge weights, set by pretraining
         self._delays: dict[int, int] = {}
+
+    @classmethod
+    def pretrain(cls, ctx: PretrainContext) -> "Wrangler":
+        tech = cls()
+        pretrain_wrangler(tech, ctx.warmup())
+        return tech
 
     def train(self, feats: np.ndarray, labels: np.ndarray,
               l2: float = 1e-2):
@@ -215,24 +246,22 @@ class Wrangler(E.Technique):
                             np.ones((len(hosts_feats), 1))], 1)
         return np.clip(A @ self.w, 0, 1)
 
-    def _host_feats(self) -> np.ndarray:
-        c = self.sim.cluster
+    def _host_feats(self, view: TelemetryView) -> np.ndarray:
+        h = view.hosts
         return np.concatenate(
-            [c.util, c.speed[:, None] / c.speed.max()], 1)
+            [h.util, h.speed[:, None] / h.speed.max()], 1)
 
-    def on_submit(self, new_idx):
-        return self._maybe_delay(new_idx)
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event == EVENT_SUBMIT:
+            return self._maybe_delay(view, view.new_tasks)
+        pend = np.nonzero(view.tasks.state == PENDING)[0]
+        return self._maybe_delay(view, pend)
 
-    def on_interval(self):
-        tt = self.sim.tasks
-        pend = np.nonzero(tt.view("state") == E.PENDING)[0]
-        return self._maybe_delay(pend)
-
-    def _maybe_delay(self, idx):
+    def _maybe_delay(self, view: TelemetryView, idx) -> list[Action]:
         if self.w is None or len(idx) == 0:
             return []
-        probs = self._prob(self._host_feats())
-        online = self.sim.cluster.online()
+        probs = self._prob(self._host_feats(view))
+        online = view.hosts.online()
         safe_exists = bool((probs[online] < self.threshold).any()) \
             if online.any() else False
         acts = []
@@ -243,7 +272,7 @@ class Wrangler(E.Technique):
             d = self._delays.get(i, 0)
             if d < self.max_delay:
                 self._delays[i] = d + 1
-                acts.append(E.SimAction("delay", i, delay=1))
+                acts.append(Action("delay", i, delay=1))
         return acts
 
 
@@ -294,12 +323,20 @@ def _gru_step(params, opt, xs, y):
     return params, opt, loss
 
 
-class IGRUSD(E.Technique):
+@register("igru-sd", substrates=("sim", "pod"),
+          epochs_knob="igru_epochs",
+          description="GRU resource/latency prediction with proactive "
+                      "speculate/rerun mitigation [22]; runs on both the "
+                      "cloud simulator and the training-pod runtime")
+class IGRUSD(Policy):
     """GRU-based resource/latency prediction + detection threshold, with the
     same speculate/rerun mitigation as START (paper §4.6 fairness note).
 
     Deliberately ignores host heterogeneity (the paper's criticism): its
-    features are task-progress only, no host capability terms.
+    features are task-progress only, no host capability terms — which is
+    also why it ports to the training-pod substrate unchanged: the pod
+    runtime synthesizes per-host shard "tasks" whose progress/elapsed
+    ratios carry the same meaning.
     """
 
     name = "igru-sd"
@@ -313,28 +350,49 @@ class IGRUSD(E.Technique):
         self._flagged: set[int] = set()
         self._last_pred: float | None = None
 
+    @classmethod
+    def pretrain(cls, ctx: PretrainContext) -> "IGRUSD":
+        tech = cls()
+        pretrain_igru(tech, ctx.warmup(),
+                      epochs=200 if ctx.epochs is None else ctx.epochs)
+        return tech
+
     def train(self, xs: np.ndarray, y: np.ndarray, epochs: int = 200):
         opt = nets.adam_init(self.params)
         for _ in range(epochs):
             self.params, opt, _ = _gru_step(
                 self.params, opt, jnp.asarray(xs), jnp.asarray(y))
 
-    def _task_feats(self, i: int) -> np.ndarray:
-        sim = self.sim
-        tt = sim.tasks
-        el = max(_elapsed(sim, i), 1.0)
-        exp = max(_expected_time(sim, i), 1.0)
+    def _task_feats(self, view: TelemetryView, i: int) -> np.ndarray:
+        tt = view.tasks
+        el = max(_elapsed(view, i), 1.0)
+        exp = max(_expected_time(view, i), 1.0)
         return np.array([
             float(tt.progress[i] / max(tt.work[i], 1e-9)),
-            float(tt.progress[i] / el / sim.cfg.host_ips_mean),
+            float(tt.progress[i] / el / view.host_ips_mean),
             float(el / exp)], np.float32)
 
-    def on_interval(self):
-        sim = self.sim
-        tt = sim.tasks
+    def observe(self, view: TelemetryView) -> None:
+        tt = view.tasks
+        for i in np.nonzero(tt.active_mask())[0]:
+            i = int(i)
+            h = self.hist.setdefault(i, [])
+            h.append(self._task_feats(view, i))
+            del h[:-self.HIST]     # only the last HIST entries are read
+
+    def forget_tasks(self, task_ids) -> None:
+        # the rolling progress-rate history stays useful across a task
+        # boundary (it describes the same host); only the once-per-task
+        # mitigation flag must expire, or a chronically slow host would
+        # be mitigated a single time for the whole run
+        for i in task_ids:
+            self._flagged.discard(int(i))
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_INTERVAL:
+            return []
+        tt = view.tasks
         run = [int(i) for i in np.nonzero(tt.active_mask())[0]]
-        for i in run:
-            self.hist.setdefault(i, []).append(self._task_feats(i))
         ready = [i for i in run if len(self.hist.get(i, [])) >= self.HIST
                  and i not in self._flagged]
         self._last_pred = 0.0
@@ -354,13 +412,13 @@ class IGRUSD(E.Technique):
         n_strag = 0.0
         cap = max(1, int(0.02 * len(run)))
         for i, p in zip(ready, preds):
-            exp = _expected_time(sim, i)
+            exp = _expected_time(view, i)
             n_strag += float(p * exp > 1.5 * exp)
-            if p > 1.5 and _elapsed(sim, i) > exp and len(acts) < cap:
+            if p > 1.5 and _elapsed(view, i) > exp and len(acts) < cap:
                 self._flagged.add(i)
                 kind = "speculate" if tt.is_deadline[i] else "rerun"
-                acts.append(E.SimAction(kind, i, target=_pick_fast_host(
-                    sim, int(tt.host[i]))))
+                acts.append(Action(kind, i, target=_pick_fast_host(
+                    view, int(tt.host[i]))))
         self._last_pred = n_strag
         return acts
 
@@ -368,24 +426,33 @@ class IGRUSD(E.Technique):
         return self._last_pred
 
 
-def pretrain_igru(tech: IGRUSD, sim_done: E.Simulation,
+def synthetic_progress_history(work: float, total: float, expected: float,
+                               ips_mean: float,
+                               hist: int = IGRUSD.HIST) -> np.ndarray:
+    """Idealized (hist, FEATS) progress history for a task of ``work`` MI
+    that took ``total`` seconds against an ``expected`` time — the
+    training-pair reconstruction shared by the warmup-sim pretrainer and
+    the pod substrate's window pretrainer."""
+    frac = np.linspace(0.15, 0.75, hist)
+    rate = work / max(total, 1.0) / ips_mean
+    el = frac * total
+    return np.stack([frac, np.full_like(frac, rate), el / expected], 1)
+
+
+def pretrain_igru(tech: IGRUSD, warm: TelemetryView,
                   epochs: int = 200) -> None:
     """Train the GRU on (progress-history -> completion/expected ratio) pairs
-    from a finished warmup simulation."""
-    tt = sim_done.tasks
+    from a finished warmup run's telemetry view."""
+    tt = warm.tasks
     xs, ys = [], []
-    done = np.nonzero((tt.view("state") == E.DONE)
-                      & ~tt.view("is_copy"))[0]
+    done = np.nonzero((tt.state == DONE) & ~tt.is_copy)[0]
     for i in done:
         i = int(i)
         total = float(tt.finish_s[i] - tt.start_s[i])
-        exp = float(tt.work[i] / sim_done.cfg.host_ips_mean)
+        exp = float(tt.work[i] / warm.host_ips_mean)
         # reconstruct an idealized progress history at the observed rate
-        frac = np.linspace(0.15, 0.75, IGRUSD.HIST)
-        rate = float(tt.work[i]) / max(total, 1.0) / sim_done.cfg.host_ips_mean
-        el = frac * total
-        feats = np.stack([frac, np.full_like(frac, rate), el / exp], 1)
-        xs.append(feats)
+        xs.append(synthetic_progress_history(
+            float(tt.work[i]), total, exp, warm.host_ips_mean))
         ys.append(total / exp)
     if not xs:
         return
@@ -393,14 +460,14 @@ def pretrain_igru(tech: IGRUSD, sim_done: E.Simulation,
                np.array(ys, np.float32), epochs=epochs)
 
 
-def pretrain_wrangler(tech: Wrangler, sim_done: E.Simulation) -> None:
+def pretrain_wrangler(tech: Wrangler, warm: TelemetryView) -> None:
     """Train Wrangler's linear model on (host utilization counters at job
-    completion -> was-straggler) pairs from a warmup simulation [17]."""
+    completion -> was-straggler) pairs from a warmup run's view [17]."""
     feats, labels = [], []
-    c = sim_done.cluster
-    speed_n = c.speed / c.speed.max()
-    hist = sim_done.util_history
-    for rec in sim_done.completed_jobs:
+    speed = warm.hosts.speed
+    speed_n = speed / speed.max()
+    hist = warm.util_history
+    for rec in warm.completed_jobs:
         t = min(rec["t"] - 1, len(hist) - 1)
         if t < 0:
             continue

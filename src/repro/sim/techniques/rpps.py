@@ -8,10 +8,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.sim import engine as E
+from repro.policy import (Action, EVENT_INTERVAL, Policy, TelemetryView,
+                          register)
 
 
-class RPPS(E.Technique):
+@register("rpps", description="online AR(p) forecast of straggler counts; "
+                              "prediction only, no mitigation [23]")
+class RPPS(Policy):
     name = "rpps"
 
     def __init__(self, order: int = 3):
@@ -19,18 +22,21 @@ class RPPS(E.Technique):
         self.history: list[float] = []
         self._last_pred: float | None = None
 
-    def _observed_straggler_count(self) -> float:
+    def _observed_straggler_count(self, view: TelemetryView) -> float:
         """Stragglers among jobs completed in the last interval (observable
         online, one interval late)."""
-        sim = self.sim
         cnt = 0.0
-        for rec in sim.completed_jobs:
-            if rec["t"] == sim.t:
+        for rec in view.completed_jobs:
+            if rec["t"] == view.t:
                 cnt += float(rec["straggler"].sum())
         return cnt
 
-    def on_interval(self):
-        self.history.append(self._observed_straggler_count())
+    def observe(self, view: TelemetryView) -> None:
+        self.history.append(self._observed_straggler_count(view))
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_INTERVAL:
+            return []
         h = np.array(self.history, float)
         p = self.order
         if len(h) <= p + 2:

@@ -1,112 +1,186 @@
-"""START technique bound to the simulator (paper §3 end-to-end).
+"""START policy (paper §3 end-to-end) on the unified policy API.
 
-Per interval: builds M_H from cluster state, per-active-job M_T from task
-requirements/placements, runs the Encoder-LSTM -> Pareto pipeline and emits
-Algorithm-1 mitigation actions (speculate for deadline jobs, rerun
-otherwise) once a job is down to its floor(E_S) predicted stragglers.
+Per interval: builds M_H from the host telemetry view, per-active-job M_T
+from task requirements/placements, runs the Encoder-LSTM -> Pareto
+pipeline and emits Algorithm-1 mitigation actions (speculate for deadline
+jobs, rerun otherwise) once a job is down to its floor(E_S) predicted
+stragglers.
 
 ``pretrain`` reproduces §4.4: run a random-scheduler simulation, collect
-per-job (feature sequence, MLE-fitted (alpha, beta)) pairs, train with MSE.
+per-job (feature sequence, MLE-fitted (alpha, beta)) pairs, train with
+MSE.  The class is :class:`repro.policy.Pretrainable`, so sweep runners
+pretrain it through the registry entry rather than by name.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core import features
 from repro.core.start import JobView, STARTController
-from repro.sim import engine as E
+from repro.policy import (Action, EVENT_INTERVAL, Policy, PretrainContext,
+                          TelemetryView, register)
 from repro.sim.config import SimConfig
-from repro.sim.scheduler import RandomScheduler
 
 
-def _host_matrix(sim: E.Simulation) -> np.ndarray:
-    c = sim.cluster
+def _host_matrix(view: TelemetryView) -> np.ndarray:
+    h = view.hosts
     return np.asarray(features.host_matrix(
-        util=np.clip(c.util, 0, 2), cap=c.cap, cost=c.cost,
-        power_max=c.power_max, n_tasks=c.n_tasks))
+        util=np.clip(h.util, 0, 2), cap=h.cap, cost=h.cost,
+        power_max=h.power_max, n_tasks=h.n_tasks))
 
 
-def _task_matrix(sim: E.Simulation, tids: list[int]) -> np.ndarray:
-    tt = sim.tasks
+def _task_matrix(view: TelemetryView, tids: list[int]) -> np.ndarray:
+    tt = view.tasks
     req = tt.req[tids] if tids else np.zeros((0, 4))
     prev = np.array([tt.host[i] for i in tids]) if tids else np.zeros(0)
     return np.asarray(features.task_matrix(
-        req=req, prev_host=prev, n_hosts=sim.cfg.n_hosts,
-        max_tasks=sim.cfg.max_tasks))
+        req=req, prev_host=prev, n_hosts=view.config.n_hosts,
+        max_tasks=view.config.max_tasks))
 
 
-class START(E.Technique):
+@register("start", epochs_knob="pretrain_epochs",
+          description="the paper's Encoder-LSTM -> Pareto predictor with "
+                      "Algorithm-1 mitigation and a regime-adaptive "
+                      "expected-benefit guard")
+class START(Policy):
+    """Prediction + mitigation with a utilization-adaptive benefit guard.
+
+    A re-execution starts from zero progress, so it only helps when
+    ``work/eff(target) < remaining/eff(source)`` with a safety *margin*
+    for the load the migration itself adds.  The paper's CloudSim runs at
+    ~7% utilization where nearly any migration pays off; at scaled-down
+    load a fixed 25% margin suppressed nearly every action in the
+    heavy-tail/overload regimes (START tied ``none`` there).  The margin
+    is therefore a policy parameter scaling with *task-attributable*
+    cluster utilization (observed CPU utilization minus the configured
+    reserved floor): ``margin_lo`` at an idle cluster — negative, i.e.
+    optimistic, since a losing speculative copy costs only cheap idle
+    capacity while hedging against future contention/faults — rising to
+    ``margin_hi`` at saturation.  RERUN kills the original task, so it
+    never goes optimistic: its margin is floored at
+    ``rerun_margin_floor``.  Pass ``margin=`` to pin a fixed margin for
+    both kinds (0.25 reproduces the legacy fixed 25% guard bitwise).
+
+    The paper's adaptive straggler parameter (§4.3: "we dynamically
+    change the k value ... with the initial value as 1.5") follows the
+    same utilization signal: ``k_lo`` when idle (flag more of the tail,
+    mitigate early) up to ``k_hi`` at saturation.
+    """
+
     name = "start"
 
     def __init__(self, controller: STARTController | None = None,
-                 seed: int = 0):
+                 seed: int = 0, margin: float | None = None,
+                 margin_lo: float = -0.50, margin_hi: float = 0.60,
+                 rerun_margin_floor: float = 0.10,
+                 k_lo: float = 1.0, k_hi: float = 1.5):
         self._controller = controller
+        self.controller = controller
         self.seed = seed
+        self.margin = margin
+        self.margin_lo = margin_lo
+        self.margin_hi = margin_hi
+        self.rerun_margin_floor = rerun_margin_floor
+        self.k_lo = k_lo
+        self.k_hi = k_hi
+        self._util = 0.0
         self._last_es_sum: float | None = None
 
-    def bind(self, sim: E.Simulation) -> None:
-        super().bind(sim)
-        if self._controller is None:
-            self._controller = STARTController(
-                n_hosts=sim.cfg.n_hosts, max_tasks=sim.cfg.max_tasks,
-                k=sim.cfg.k, seed=self.seed)
-        self.controller = self._controller
+    # ------------------------------ pretraining ----------------------------
 
-    def on_interval(self) -> list[E.SimAction]:
-        sim = self.sim
+    @classmethod
+    def pretrain(cls, ctx: PretrainContext) -> "START":
+        ctrl = pretrain(dataclasses.replace(ctx.config, seed=7),
+                        epochs=30 if ctx.epochs is None else ctx.epochs,
+                        lr=1e-3)
+        return cls(controller=ctrl)
+
+    # ------------------------------ policy api -----------------------------
+
+    def _ensure_controller(self, view: TelemetryView) -> STARTController:
+        if self._controller is None:
+            cfg = view.config
+            self._controller = STARTController(
+                n_hosts=cfg.n_hosts, max_tasks=cfg.max_tasks,
+                k=cfg.k, seed=self.seed)
+        self.controller = self._controller
+        return self._controller
+
+    def observe(self, view: TelemetryView) -> None:
+        ctrl = self._ensure_controller(view)
+        # task-attributable utilization: the guard/k adaptation should
+        # respond to load that mitigation competes with, not the static
+        # reserved floor (overload-scenario experiments)
+        raw = float(np.clip(view.hosts.util[:, 0].mean(), 0.0, 1.0))
+        reserved = float(getattr(view.config, "reserved_utilization", 0.0))
+        self._util = float(np.clip(raw - reserved, 0.0, 1.0))
         # adaptive straggler parameter (paper §4.3: "we dynamically change
         # the k value based on empirical results for the data up till the
         # current interval with the initial value as 1.5"): mitigate more
         # aggressively when the cluster has headroom, conservatively when
         # it is loaded.
-        util = float(np.clip(sim.cluster.util[:, 0].mean(), 0.0, 1.0))
-        self.controller.predictor.k = 1.1 + 0.8 * util
-        self.controller.observe_hosts(_host_matrix(sim))
-        # ground-truth MA update from jobs completed so far
-        self.controller.observe_straggler_counts(
-            sim.straggler_ma)  # engine keeps the 0.8-decay MA
+        ctrl.predictor.k = self.k_lo + (self.k_hi - self.k_lo) * self._util
+        ctrl.observe_hosts(_host_matrix(view))
+        # ground-truth MA update from jobs completed so far (the engine
+        # keeps the 0.8-decay moving average)
+        ctrl.observe_straggler_counts(view.straggler_ma)
+
+    def benefit_margin(self, kind: str = "speculate") -> float:
+        """Migration-overhead margin for the expected-benefit guard at the
+        most recently observed utilization.  RERUN margins never drop
+        below ``rerun_margin_floor`` (a re-run forfeits the original's
+        progress; a speculative copy does not)."""
+        if self.margin is not None:
+            return self.margin
+        m = self.margin_lo + (self.margin_hi - self.margin_lo) * self._util
+        if kind == "rerun":
+            m = max(m, self.rerun_margin_floor)
+        return m
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        if view.event != EVENT_INTERVAL:
+            return []
+        ctrl = self._ensure_controller(view)
         views = []
-        for job in sim.active_jobs():
-            inc = sim.job_incomplete_tasks(job)
+        for job in view.jobs.active():
+            inc = view.jobs.incomplete_tasks(job)
             if not inc:
                 continue
             views.append(JobView(
-                job_id=job, q=len(sim.job_tasks[job]),
-                deadline_oriented=sim.job_deadline[job],
+                job_id=job, q=len(view.jobs.tasks[job]),
+                deadline_oriented=view.jobs.deadline[job],
                 incomplete_task_ids=inc,
-                task_hosts=[int(sim.tasks.host[i]) for i in inc],
-                task_matrix=_task_matrix(sim, sim.job_tasks[job])))
+                task_hosts=[int(view.tasks.host[i]) for i in inc],
+                task_matrix=_task_matrix(view, view.jobs.tasks[job])))
         # target scoring: prefer fast + idle hosts among straggler-MA ties
-        c = sim.cluster
-        load = c.util[:, 0] - 0.5 * (c.speed / c.speed.max())
-        acts = self.controller.decide(views, host_load=load)
-        self._last_es_sum = float(
-            sum(self.controller._es_cache.get(v.job_id, 0.0)
-                for v in views))
+        h = view.hosts
+        load = h.util[:, 0] - 0.5 * (h.speed / h.speed.max())
+        acts = ctrl.decide(views, host_load=load)
+        self._last_es_sum = ctrl.es_total(v.job_id for v in views)
         # expected-benefit guard: a re-execution starts from zero progress,
         # so it only helps when  work/eff(target) < remaining/eff(source)
-        # (with a 25% margin for the load the migration itself adds). The
-        # paper's CloudSim runs at ~7% utilization where this nearly always
-        # holds; at our scaled-down load the guard keeps mitigation from
-        # feeding the very contention it is meant to cure (DESIGN.md).
-        eff = c.effective_speed()
-        tt = sim.tasks
+        # with the utilization-scaled, kind-aware margin (class docstring)
+        eff = h.effective_speed()
+        tt = view.tasks
         out = []
         for a in acts:
             src, tgt = a.source_host, a.target_host
             i = a.task_id
-            down = src >= 0 and c.downtime[src] > 0
+            kind = "speculate" if a.kind.value == "speculate" else "rerun"
+            down = src >= 0 and h.downtime[src] > 0
             if not down:
+                factor = 1.0 / (1.0 + self.benefit_margin(kind))
                 src_eff = max(eff[src] if src >= 0 else 0.0, 1e-9)
                 tgt_eff = max(eff[tgt], 1e-9)
                 remaining = float(tt.work[i] - tt.progress[i])
                 t_stay = remaining / src_eff
-                t_move = float(tt.work[i]) / (0.8 * tgt_eff)
+                t_move = float(tt.work[i]) / (factor * tgt_eff)
                 if t_move >= t_stay:
                     continue
-            kind = "speculate" if a.kind.value == "speculate" else "rerun"
-            out.append(E.SimAction(kind=kind, task=a.task_id,
-                                   target=a.target_host))
+            out.append(Action(kind=kind, task=a.task_id,
+                              target=a.target_host))
         return out
 
     def predicted_straggler_count(self) -> float | None:
@@ -115,15 +189,19 @@ class START(E.Technique):
 
 def collect_training_data(cfg: SimConfig, horizon: int = 5
                           ) -> tuple[np.ndarray, np.ndarray]:
-    """§4.4: random-scheduler run -> (xs: (T, jobs, dim), targets: (jobs, 2))."""
-    sim = E.Simulation(cfg, technique=NoOpRecorder(horizon),
-                       scheduler=RandomScheduler())
+    """§4.4: random-scheduler run ->
+    (xs: (T, jobs, dim), targets: (jobs, 2))."""
+    from repro.sim.engine import Simulation
+    from repro.sim.scheduler import RandomScheduler
+
+    sim = Simulation(cfg, technique=NoOpRecorder(horizon),
+                     scheduler=RandomScheduler())
     sim.run()
     rec: NoOpRecorder = sim.technique  # type: ignore[assignment]
-    return rec.dataset(sim)
+    return rec.dataset(sim.snapshot())
 
 
-class NoOpRecorder(E.Technique):
+class NoOpRecorder(Policy):
     """Records host matrices + job completions to build the training set."""
 
     name = "recorder"
@@ -132,29 +210,28 @@ class NoOpRecorder(E.Technique):
         self.horizon = horizon
         self.host_hist: list[np.ndarray] = []
 
-    def on_interval(self) -> list[E.SimAction]:
-        self.host_hist.append(_host_matrix(self.sim))
-        return []
+    def observe(self, view: TelemetryView) -> None:
+        self.host_hist.append(_host_matrix(view))
 
-    def dataset(self, sim: E.Simulation):
+    def dataset(self, view: TelemetryView):
         from repro.core import pareto
         xs, ys = [], []
         hh = np.stack(self.host_hist)  # (T_total, n, m)
-        for rec in sim.completed_jobs:
+        for rec in view.completed_jobs:
             t_end = min(rec["t"], len(hh)) - 1
             lo = max(0, t_end - self.horizon + 1)
             seq = hh[lo:t_end + 1]
             if len(seq) < self.horizon:
                 seq = np.concatenate(
                     [np.repeat(seq[:1], self.horizon - len(seq), 0), seq])
-            mt = _task_matrix(sim, sim.job_tasks[rec["job"]])
+            mt = _task_matrix(view, view.jobs.tasks[rec["job"]])
             x = np.concatenate(
                 [seq.reshape(self.horizon, -1),
                  np.repeat(mt.reshape(1, -1), self.horizon, 0)], axis=-1)
             a, b = pareto.fit_pareto_np(rec["times"])
             xs.append(x)
             # beta regressed in interval units (predictor beta_scale)
-            ys.append([float(a), float(b) / sim.cfg.interval_seconds])
+            ys.append([float(a), float(b) / view.interval_seconds])
         if not xs:
             raise RuntimeError("no completed jobs to train on")
         return np.stack(xs, axis=1), np.array(ys, np.float32)

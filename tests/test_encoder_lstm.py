@@ -106,7 +106,8 @@ def test_predictor_fit_targets_match_mle():
 def test_feature_matrices():
     m_h = features.host_matrix(
         util=jnp.full((3, 4), 0.25), cap=jnp.ones((3, 4)) * 8,
-        cost=jnp.array([1.0, 2.0, 4.0]), power_max=jnp.array([100., 200., 50.]),
+        cost=jnp.array([1.0, 2.0, 4.0]),
+        power_max=jnp.array([100., 200., 50.]),
         n_tasks=jnp.array([0, 5, 10]))
     assert m_h.shape == (3, features.HOST_FEATURES)
     assert float(m_h[:, 4:8].max()) == pytest.approx(1.0)  # caps normalized

@@ -1,15 +1,14 @@
 """Simulator behaviour + invariant tests (engine, cluster, faults, metrics)."""
 import numpy as np
-import pytest
 # hypothesis is optional: conftest.py installs a fixed-example fallback stub
 # when the real package is absent, so collection never hard-errors
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.sim import SimConfig, Simulation, small
+from repro.sim import Simulation, small
 from repro.sim import engine as E
 from repro.sim.scheduler import RandomScheduler, UtilizationAwareScheduler
-from repro.sim.techniques import GRASS, SGC, Dolly, NearestFit, make
+from repro.sim.techniques import SGC, make
 
 
 def run_small(tech=None, **kw):

@@ -150,12 +150,12 @@ def test_sweep_csv_artifacts(tmp_path):
 
 
 def test_aggregate_mean_and_ci():
-    spec = SweepSpec(techniques=("x",), seeds=(0, 1, 2), scenarios=("s",),
-                     metrics=("m",))
-    cells = [CellResult("s", "x", i, {"m": v}, 0.0)
+    spec = SweepSpec(techniques=("none",), seeds=(0, 1, 2),
+                     scenarios=("planetlab",), metrics=("m",))
+    cells = [CellResult("planetlab", "none", i, {"m": v}, 0.0)
              for i, v in enumerate((1.0, 2.0, 3.0))]
     res = SweepResult(spec=spec, cells=cells, wall_s=0.0, n_workers=1)
-    st = res.aggregate()[("s", "x")]["m"]
+    st = res.aggregate()[("planetlab", "none")]["m"]
     assert st["mean"] == pytest.approx(2.0)
     assert st["n"] == 3
     assert st["ci95"] == pytest.approx(1.96 * 1.0 / np.sqrt(3))
@@ -174,8 +174,12 @@ def test_overrides_may_replace_base_sizing_keys():
 
 
 def test_unknown_technique_and_scenario_raise():
-    with pytest.raises(KeyError):
+    # unknown techniques raise ValueError naming the registered set (and
+    # are caught at SweepSpec construction, before any worker spawns)
+    with pytest.raises(ValueError, match="registered techniques"):
         run_cell(_tiny_spec(), "planetlab", "bogus", 0)
+    with pytest.raises(ValueError, match="registered techniques"):
+        _tiny_spec(techniques=("bogus",))
     with pytest.raises(KeyError):
         run_cell(_tiny_spec(), "bogus", "none", 0)
 

@@ -10,8 +10,7 @@ from repro.configs import get_reduced
 from repro.models.lm import Model
 from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, SyntheticLM
-from repro.train.optimizer import OptConfig, init, opt_specs, schedule, \
-    update
+from repro.train.optimizer import OptConfig, init, schedule, update
 from repro.train.trainer import TrainConfig, Trainer, auto_n_micro, \
     make_train_step
 
