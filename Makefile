@@ -2,7 +2,7 @@
 
 PY := python
 
-.PHONY: test test-all lint sweep-bench bench
+.PHONY: test test-all lint sweep-bench engine-bench bench
 
 test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -13,8 +13,11 @@ lint:  ## ruff lane (configured in ruff.toml; pip install ruff)
 test-all:  ## full tier-1 suite (ROADMAP verify command)
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-sweep-bench:  ## serial-vs-parallel scenario sweep benchmark
+sweep-bench:  ## serial vs cold/warm-pool sweep benchmark -> BENCH_sweep.json
 	PYTHONPATH=src $(PY) benchmarks/sweep_bench.py
+
+engine-bench:  ## single-cell (planetlab x start) benchmark -> BENCH_engine.json
+	PYTHONPATH=src $(PY) benchmarks/engine_bench.py
 
 bench:  ## paper figure reproductions (scaled-down)
 	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,0 +1,132 @@
+"""Single-cell engine benchmark: the `planetlab x start` sweep cell.
+
+Measures what the sweep subsystem pays per grid cell — the quantity that
+multiplies every Table-4-style experiment — and writes a perf-trajectory
+artifact to the repo root (``BENCH_engine.json``):
+
+  * ``cold_wall_s``   — first cell in a fresh process (includes the XLA
+    compiles for the predict-path batch buckets);
+  * ``warm_wall_s``   — steady-state cell (what a persistent sweep worker
+    pays from its second cell on);
+  * ``intervals_per_s`` (warm), ``predict_ms_per_interval`` (policy
+    decision overhead, dominated by Encoder-LSTM inference);
+  * ``retraces_during_cell`` + ``buckets`` — ``predict_sequence`` must
+    compile at most once per power-of-two job-batch bucket;
+  * speedups vs the pre-vectorization mainline (constants measured on the
+    same container at the branch point; override with ``--baseline-cold``/
+    ``--baseline-warm`` when re-baselining on other hardware).
+
+    PYTHONPATH=src python benchmarks/engine_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import write_csv  # noqa: E402
+
+from repro.core import encoder_lstm as net  # noqa: E402
+from repro.sim import sweep  # noqa: E402
+from repro.sim.engine import Simulation  # noqa: E402
+from repro.sim.sweep import SweepSpec  # noqa: E402
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# mainline (pre-array-native hot path) reference, measured on the CI
+# container with this exact sizing: per-task placement loop, dict job
+# bookkeeping, per-job jnp feature assembly, eager pareto tail.
+BASELINE_MAIN = {"cold_wall_s": 3.978, "warm_wall_s": 0.561}
+
+
+def bench_cell(n_hosts: int, n_intervals: int):
+    spec = SweepSpec(techniques=("start",), seeds=(0,),
+                     scenarios=("planetlab",), n_hosts=n_hosts,
+                     n_intervals=n_intervals, arrival_rate=0.6,
+                     max_workers=1, pretrain_epochs=8)
+    cfg = spec.cell_config("planetlab", 0)
+
+    t0 = time.perf_counter()
+    tech = sweep.make_technique("start", cfg, pretrain_epochs=8)
+    pretrain_s = time.perf_counter() - t0
+
+    compiles_before = net.predict_sequence._cache_size()
+    t0 = time.perf_counter()
+    sim = Simulation(cfg, technique=tech)
+    sim.run()
+    cold_wall_s = time.perf_counter() - t0
+    retraces = net.predict_sequence._cache_size() - compiles_before
+
+    # steady state: what a persistent sweep worker pays per cell once the
+    # jit caches are warm (fresh technique instance, same trained params)
+    warm_walls = []
+    for _ in range(3):
+        tech = sweep.make_technique("start", cfg, pretrain_epochs=8)
+        t0 = time.perf_counter()
+        sim = Simulation(cfg, technique=tech)
+        sim.run()
+        warm_walls.append(time.perf_counter() - t0)
+    warm_wall_s = float(min(warm_walls))
+    warm_retraces = (net.predict_sequence._cache_size()
+                     - compiles_before - retraces)
+
+    predict_ms = float(np.mean(sim.log.overhead_s) * 1e3)
+    buckets = sorted(tech._controller.predictor.buckets_used)
+    return dict(
+        bench="planetlab-x-start",
+        n_hosts=n_hosts, n_intervals=n_intervals, arrival_rate=0.6,
+        pretrain_s=round(pretrain_s, 3),
+        cold_wall_s=round(cold_wall_s, 3),
+        warm_wall_s=round(warm_wall_s, 3),
+        intervals_per_s=round(n_intervals / warm_wall_s, 2),
+        predict_ms_per_interval=round(predict_ms, 3),
+        retraces_during_cell=int(retraces),
+        retraces_during_warm_cells=int(warm_retraces),
+        buckets=buckets,
+    )
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller cell for CI smoke runs")
+    ap.add_argument("--hosts", type=int, default=None)
+    ap.add_argument("--intervals", type=int, default=None)
+    ap.add_argument("--baseline-cold", type=float,
+                    default=BASELINE_MAIN["cold_wall_s"])
+    ap.add_argument("--baseline-warm", type=float,
+                    default=BASELINE_MAIN["warm_wall_s"])
+    args = ap.parse_args(argv)
+
+    n_hosts = args.hosts or (16 if args.quick else 32)
+    n_intervals = args.intervals or (36 if args.quick else 72)
+    out = bench_cell(n_hosts, n_intervals)
+    default_sizing = n_hosts == 32 and n_intervals == 72
+    out["baseline_main"] = ({"cold_wall_s": args.baseline_cold,
+                             "warm_wall_s": args.baseline_warm}
+                            if default_sizing else None)
+    if default_sizing:  # speedups only comparable at the measured sizing
+        out["speedup_cold"] = round(args.baseline_cold
+                                    / out["cold_wall_s"], 2)
+        out["speedup_warm"] = round(args.baseline_warm
+                                    / out["warm_wall_s"], 2)
+
+    path = os.path.join(REPO_ROOT, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    write_csv("engine_bench.csv", ["metric", "value"],
+              [[k, json.dumps(v)] for k, v in out.items()])
+
+    print(json.dumps(out, indent=1, sort_keys=True))
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,22 @@ def lstm_cell_apply(layer: Params, h: jax.Array, c: jax.Array,
     return h_new, c_new
 
 
+def _cell_apply(layer: Params, h: jax.Array, c: jax.Array, x: jax.Array,
+                use_pallas: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Dispatch one cell step to the jnp cell or the fused Pallas kernel
+    (``repro.kernels.lstm_cell``; exact-match tested against
+    :func:`lstm_cell_apply`)."""
+    if not use_pallas:
+        return lstm_cell_apply(layer, h, c, x)
+    from repro.kernels.lstm_cell import lstm_cell
+    batch = h.shape[:-1]
+    hid = h.shape[-1]
+    h2, c2 = lstm_cell(x.reshape(-1, x.shape[-1]), h.reshape(-1, hid),
+                       c.reshape(-1, hid), layer["wx"], layer["wh"],
+                       layer["b"])
+    return h2.reshape(*batch, hid), c2.reshape(*batch, hid)
+
+
 class LSTMState(NamedTuple):
     h: jax.Array  # (layers, ..., hidden)
     c: jax.Array
@@ -104,14 +120,15 @@ def init_state(params: Params, batch_shape: tuple = ()) -> LSTMState:
     return LSTMState(h=z, c=z)
 
 
-def step(params: Params, state: LSTMState, x: jax.Array
-         ) -> tuple[LSTMState, jax.Array]:
+def step(params: Params, state: LSTMState, x: jax.Array,
+         use_pallas: bool = False) -> tuple[LSTMState, jax.Array]:
     """One inference step: encoder -> stacked LSTM -> (alpha, beta) head."""
     lam = encoder_apply(params, x)
     hs, cs = [], []
     inp = lam
     for li, layer in enumerate(params["lstm"]):
-        h_new, c_new = lstm_cell_apply(layer, state.h[li], state.c[li], inp)
+        h_new, c_new = _cell_apply(layer, state.h[li], state.c[li], inp,
+                                   use_pallas=use_pallas)
         hs.append(h_new)
         cs.append(c_new)
         inp = h_new
@@ -138,20 +155,26 @@ def ema_smooth(seq: jax.Array, w: float = EMA_W) -> jax.Array:
     return out.at[0].set(seq[0])
 
 
-@functools.partial(jax.jit, static_argnames=())
-def predict_sequence(params: Params, xs: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def predict_sequence(params: Params, xs: jax.Array,
+                     use_pallas: bool = False) -> jax.Array:
     """Run the net over a (T, ..., input_dim) EMA-smoothed feature sequence.
 
     Returns the final-step (alpha, beta), shape (..., 2). This is the paper's
     "send matrices for T seconds every I seconds; read (alpha, beta) at the
     end" loop, with T = xs.shape[0] steps.
+
+    Compiles once per (shape, use_pallas) signature — callers in the
+    simulator hot path pad the batch axis to power-of-two buckets
+    (``repro.core.predictor``) so the compile count is bounded by the
+    bucket set, not the number of distinct job counts.
     """
     xs = ema_smooth(xs)
     batch_shape = xs.shape[1:-1]
     state = init_state(params, batch_shape)
 
     def f(state, x):
-        state, out = step(params, state, x)
+        state, out = step(params, state, x, use_pallas=use_pallas)
         return state, out
 
     _, outs = jax.lax.scan(f, state, xs)

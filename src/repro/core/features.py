@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 HOST_FEATURES = 11
 TASK_FEATURES = 5
@@ -42,6 +43,48 @@ def host_matrix(util: jax.Array, cap: jax.Array, cost: jax.Array,
     return jnp.concatenate(
         [jnp.asarray(util, jnp.float32), cap_n,
          cost_n[:, None], p_n[:, None], nt_n[:, None]], axis=-1)
+
+
+def host_matrix_np(util: np.ndarray, cap: np.ndarray, cost: np.ndarray,
+                   power_max: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`host_matrix` for the simulator's per-interval
+    hot path: bitwise-identical float32 arithmetic (every op is an exact
+    IEEE elementwise op or reduction), no per-call XLA dispatch."""
+    util = np.asarray(util, np.float32)
+    cap = np.asarray(cap, np.float32)
+    cap_n = cap / np.maximum(cap.max(axis=0, keepdims=True),
+                             np.float32(1e-8))
+    cost = np.asarray(cost, np.float32)
+    cost_n = cost / np.maximum(cost.max(), np.float32(1e-8))
+    p = np.asarray(power_max, np.float32)
+    p_n = p / np.maximum(p.max(), np.float32(1e-8))
+    nt = np.asarray(n_tasks, np.float32)
+    nt_n = nt / np.maximum(nt.max(), np.float32(1.0))
+    return np.concatenate(
+        [util, cap_n, cost_n[:, None], p_n[:, None], nt_n[:, None]],
+        axis=-1)
+
+
+def task_matrix_batch_np(req: np.ndarray, prev_host: np.ndarray,
+                         rows: np.ndarray, cols: np.ndarray, n_jobs: int,
+                         n_hosts: int, max_tasks: int) -> np.ndarray:
+    """Batched NumPy twin of :func:`task_matrix`: one scatter builds every
+    job's (max_tasks, TASK_FEATURES) matrix.
+
+    Args:
+        req: (total_tasks, 4) requirement rows, all jobs concatenated.
+        prev_host: (total_tasks,) previous-interval host per row, -1 none.
+        rows: (total_tasks,) destination job index of each row.
+        cols: (total_tasks,) destination row within the job (0..q-1).
+        n_jobs: number of output matrices.
+        n_hosts, max_tasks: normalization / padding as in `task_matrix`.
+    """
+    mt = np.zeros((n_jobs, max_tasks, TASK_FEATURES), np.float32)
+    if len(rows):
+        mt[rows, cols, :4] = np.asarray(req, np.float32)
+        mt[rows, cols, 4] = ((np.asarray(prev_host, np.float32)
+                              + np.float32(1.0)) / np.float32(n_hosts))
+    return mt
 
 
 def task_matrix(req: jax.Array, prev_host: jax.Array, n_hosts: int,

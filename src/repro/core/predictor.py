@@ -3,6 +3,13 @@
 Ties together feature extraction, the Encoder-LSTM network and the Pareto
 expected-straggler computation, and owns network training (MSE against
 MLE-fitted (alpha, beta) targets — paper §4.4).
+
+Inference is shape-disciplined: ``predict_features`` pads the job batch to
+a power-of-two bucket before entering the jitted network, so a sweep cell
+compiles **once per bucket size**, never once per active-job count (the
+silent-retrace failure mode: every new job count is a new batch shape and
+a full XLA retrace).  ``buckets_used`` records the bucket set for
+retrace-accounting tests and benchmarks.
 """
 from __future__ import annotations
 
@@ -24,6 +31,29 @@ class Prediction(NamedTuple):
     e_s: jax.Array        # expected straggler count (...,)
 
 
+def bucket_size(n: int) -> int:
+    """Smallest power of two >= n (the jit batch-shape bucket)."""
+    return max(1 << (int(n) - 1).bit_length(), 1) if n else 1
+
+
+@jax.jit
+def _pareto_tail(ab: jax.Array, q: jax.Array, k: jax.Array,
+                 beta_scale: jax.Array):
+    """(alpha, beta) head outputs -> (alpha, beta, K, E_S), fused.
+
+    Kept op-for-op identical to the historical eager chain
+    (``straggler_threshold`` + ``expected_stragglers``) so results are
+    bitwise-stable; jitting it replaces ~10 per-interval eager dispatches
+    (each a compile per batch bucket) with one cached call.
+    """
+    alpha = ab[..., 0]
+    beta = ab[..., 1] * beta_scale
+    thr = k * (alpha * beta / (alpha - 1.0))
+    kk = thr / beta
+    e_s = q * kk ** (-alpha)
+    return alpha, beta, thr, e_s
+
+
 @dataclasses.dataclass
 class StragglerPredictor:
     """Owns Encoder-LSTM params + the (I, T, k) hyper-parameters.
@@ -41,34 +71,89 @@ class StragglerPredictor:
     # beta (the Pareto scale, in seconds) is regressed in units of
     # beta_scale so the MSE loss is O(1); alpha is O(1) already
     beta_scale: float = 1.0
+    # route the LSTM cell through the fused Pallas kernel
+    # (repro.kernels.lstm_cell); exact-match tested against the jnp cell
+    use_pallas_cell: bool = False
 
     def __post_init__(self):
         self.input_dim = features.input_dim(self.n_hosts, self.max_tasks)
-        self.params = net.init_params(jax.random.PRNGKey(self.seed),
-                                      self.input_dim)
+        # params live on device for their whole lifetime — predictions
+        # upload only the per-interval feature batch
+        self.params = jax.device_put(
+            net.init_params(jax.random.PRNGKey(self.seed), self.input_dim))
         self.opt = net.adam_init(self.params)
         self._losses: list[float] = []
+        self.buckets_used: set[int] = set()
 
     # ---------------------------- inference -------------------------------
 
-    def predict(self, m_h_seq: jax.Array, m_t_seq: jax.Array,
-                q: jax.Array) -> Prediction:
-        """Predict (alpha, beta, K, E_S) for a batch of jobs.
+    def predict_features(self, m_h_seq: np.ndarray, m_t: np.ndarray,
+                         q: np.ndarray) -> Prediction:
+        """Predict (alpha, beta, K, E_S) for a batch of jobs from numpy
+        feature matrices (the simulator hot path).
 
         Args:
             m_h_seq: (T, n_hosts, HOST_FEATURES) shared host history.
-            m_t_seq: (T, jobs, max_tasks, TASK_FEATURES) per-job task history.
+            m_t: (jobs, max_tasks, TASK_FEATURES) current task matrices
+                (broadcast across T — the engine publishes one M_T per
+                decision point).
+            q: (jobs,) true task counts.
+
+        The job axis is zero-padded to a power-of-two bucket before the
+        jitted network; padded rows are masked off the returned arrays.
+        """
+        n = m_t.shape[0]
+        return self._predict_bucketed(
+            m_h_seq, np.asarray(m_t, np.float32).reshape(1, n, -1), n, q)
+
+    def predict(self, m_h_seq: jax.Array, m_t_seq: jax.Array,
+                q: jax.Array) -> Prediction:
+        """Predict from full (T, jobs, ...) matrix sequences (general API;
+        tolerates time-varying task matrices).
+
+        Args:
+            m_h_seq: (T, n_hosts, HOST_FEATURES) shared host history.
+            m_t_seq: (T, jobs, max_tasks, TASK_FEATURES) per-job history.
             q: (jobs,) true task counts.
         """
-        t = m_t_seq.shape[0]
-        jobs = m_t_seq.shape[1]
-        mh = jnp.broadcast_to(m_h_seq[:, None], (t, jobs, *m_h_seq.shape[1:]))
-        xs = features.flatten_inputs(mh, m_t_seq)  # (T, jobs, input_dim)
-        ab = net.predict_sequence(self.params, xs)  # (jobs, 2)
-        alpha, beta = ab[..., 0], ab[..., 1] * self.beta_scale
-        thr = pareto.straggler_threshold(alpha, beta, self.k)
-        e_s = pareto.expected_stragglers(q, alpha, beta, self.k)
+        t, jobs = m_t_seq.shape[0], m_t_seq.shape[1]
+        return self._predict_bucketed(
+            m_h_seq, np.asarray(m_t_seq, np.float32).reshape(t, jobs, -1),
+            jobs, q)
+
+    def _predict_bucketed(self, m_h_seq: np.ndarray, mt_flat: np.ndarray,
+                          n: int, q: np.ndarray) -> Prediction:
+        """Shared bucketing contract: assemble the (T, bucket, input_dim)
+        batch — host features on every row, task features zero-padded
+        past ``n``, q padded with 1.0 — run the jitted network, and mask
+        the padded rows off the outputs.  ``mt_flat`` is (1|T, n, -1)
+        flattened task features (broadcast across T when 1)."""
+        t = m_h_seq.shape[0]
+        nb = bucket_size(n)
+        self.buckets_used.add(nb)
+        mh_flat = np.asarray(m_h_seq, np.float32).reshape(t, 1, -1)
+        host_dim = mh_flat.shape[-1]
+        xs = np.zeros((t, nb, self.input_dim), np.float32)
+        xs[:, :, :host_dim] = mh_flat
+        xs[:, :n, host_dim:] = mt_flat
+        qp = np.ones(nb, np.float32)
+        qp[:n] = np.asarray(q, np.float32)
+        pred = self._predict_xs(xs, qp)
+        return Prediction(*(np.asarray(f)[:n] for f in pred))
+
+    def _predict_xs(self, xs: np.ndarray, q: np.ndarray) -> Prediction:
+        ab = net.predict_sequence(self.params, jnp.asarray(xs),
+                                  use_pallas=self.use_pallas_cell)
+        alpha, beta, thr, e_s = _pareto_tail(
+            ab, jnp.asarray(q), jnp.float32(self.k),
+            jnp.float32(self.beta_scale))
         return Prediction(alpha=alpha, beta=beta, threshold=thr, e_s=e_s)
+
+    @property
+    def compile_count(self) -> int:
+        """Cumulative XLA compiles of the jitted network in this process
+        (spanning every predictor instance — jit caches are global)."""
+        return net.predict_sequence._cache_size()
 
     # ---------------------------- training --------------------------------
 
@@ -80,16 +165,29 @@ class StragglerPredictor:
 
     def fit(self, xs: jax.Array, targets: jax.Array, epochs: int = 50,
             lr: float = 1e-5, batch: int = 64) -> list[float]:
-        """Train on (T, N, input_dim) sequences vs (N, 2) targets."""
+        """Train on (T, N, input_dim) sequences vs (N, 2) targets.
+
+        Minibatches keep one shape: when N > batch the trailing partial
+        batch is dropped (each epoch re-permutes, so all data is seen
+        across epochs) instead of retracing ``train_step`` on a second
+        shape; when N <= batch the single batch is the whole set.
+        Records the epoch-mean loss, not the last batch's.
+        """
         n = xs.shape[1]
         rng = np.random.default_rng(self.seed)
+        xs = jnp.asarray(xs)           # resident on device across epochs
+        targets = jnp.asarray(targets)
         for _ in range(epochs):
             order = rng.permutation(n)
-            for s in range(0, n, batch):
+            if n > batch:
+                order = order[:n - (n % batch)]
+            losses = []
+            for s in range(0, len(order), batch):
                 idx = order[s:s + batch]
                 self.params, self.opt, loss = net.train_step(
                     self.params, self.opt, xs[:, idx], targets[idx], lr=lr)
-            self._losses.append(float(loss))
+                losses.append(float(loss))
+            self._losses.append(float(np.mean(losses)))
         return self._losses
 
     @property

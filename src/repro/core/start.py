@@ -14,7 +14,6 @@ import collections
 import dataclasses
 from typing import Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mitigation
@@ -74,22 +73,17 @@ class STARTController:
     # ------------------------------ decision ------------------------------
 
     def predict_es(self, jobs: Sequence[JobView]) -> np.ndarray:
-        """Batched PredictStraggler (Alg. 1 lines 6-13) over current jobs."""
+        """Batched PredictStraggler (Alg. 1 lines 6-13) over current jobs.
+
+        Feature assembly is pure numpy; the predictor pads the job batch
+        to a power-of-two bucket so the jitted network compiles once per
+        bucket, never once per job count."""
         if not jobs or not self._host_hist:
             return np.zeros(len(jobs))
-        m_h_seq = jnp.asarray(self._host_seq())
         m_t = np.stack([j.task_matrix for j in jobs])  # (jobs, q', p)
-        # pad the job batch to a power of two so jit compiles once per bucket
-        n = len(jobs)
-        pad = max(1 << (n - 1).bit_length(), 1) - n if n else 0
-        if pad:
-            m_t = np.concatenate([m_t, np.zeros((pad, *m_t.shape[1:]),
-                                                m_t.dtype)])
-        m_t_seq = jnp.broadcast_to(
-            jnp.asarray(m_t)[None], (self.horizon, *m_t.shape))
-        q = jnp.asarray([j.q for j in jobs] + [1.0] * pad, jnp.float32)
-        pred = self.predictor.predict(m_h_seq, m_t_seq, q)
-        e_s = np.asarray(pred.e_s)[:n]
+        q = np.array([j.q for j in jobs], np.float32)
+        pred = self.predictor.predict_features(self._host_seq(), m_t, q)
+        e_s = np.asarray(pred.e_s)
         for j, e in zip(jobs, e_s):
             self._es_cache[j.job_id] = float(e)
         return e_s

@@ -238,6 +238,7 @@ class StragglerRuntime:
             is_copy=readonly(np.zeros(n, bool)),
             orig=readonly(np.full(n, -1, np.int64)),
             delayed_until=readonly(np.zeros(n, np.int64)),
+            prev_host=readonly(np.full(n, -1, np.int64)),
             req=readonly(np.zeros((n, 4))))
         ones = np.ones(n)
         hosts = HostTelemetry(
@@ -247,8 +248,12 @@ class StragglerRuntime:
             n_tasks=readonly(np.ones(n, np.int64)),
             downtime=readonly(evicted_arr), ips=readonly(ones))
         jobs = JobTelemetry(
-            tasks={0: list(range(n))}, deadline={0: True},
-            _open={0: int((state == RUNNING).sum())}, _done=set(),
+            start=readonly(np.zeros(1, np.int64)),
+            count=readonly(np.array([n], np.int64)),
+            open_count=readonly(np.array([int((state == RUNNING).sum())],
+                                         np.int64)),
+            done=readonly(np.zeros(1, bool)),
+            deadline=readonly(np.ones(1, bool)),
             _state=state)
         return TelemetryView(
             event=EVENT_INTERVAL, t=self.t, now_s=now,

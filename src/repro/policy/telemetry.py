@@ -73,6 +73,7 @@ class TaskTelemetry:
     is_copy: np.ndarray
     orig: np.ndarray            # original task id for copies, else -1
     delayed_until: np.ndarray   # interval index a DELAY holds until
+    prev_host: np.ndarray       # host before the last restart/bounce, -1
     req: np.ndarray
 
     def active_mask(self) -> np.ndarray:
@@ -105,26 +106,40 @@ class HostTelemetry:
 
 @dataclasses.dataclass(frozen=True)
 class JobTelemetry:
-    """Job → task index plus per-job flags.
+    """CSR job -> task index plus per-job flags.
 
-    The mappings are live references into the substrate (zero-copy);
-    policies must treat them as read-only.
+    Jobs are dense integer ids; job ``j``'s original tasks occupy the
+    contiguous task-id range ``[start[j], start[j] + count[j])`` (the
+    substrate appends whole jobs in submission order, and speculative
+    copies are tracked separately).  Every field is an array indexed by
+    job id, so ``active()`` and per-job lookups are O(1) array slices,
+    never per-interval Python scans over a dict.
     """
 
-    tasks: Mapping[int, list]        # job id -> task ids
-    deadline: Mapping[int, bool]     # job id -> deadline-oriented?
-    _open: Mapping[int, int]         # job id -> non-terminal original count
-    _done: frozenset | set           # job ids fully accounted
-    _state: np.ndarray               # task state array (shared with tasks)
+    start: np.ndarray        # (n_jobs,) first original-task id
+    count: np.ndarray        # (n_jobs,) original-task count (the paper's q)
+    open_count: np.ndarray   # (n_jobs,) non-terminal original count
+    done: np.ndarray         # (n_jobs,) bool: fully accounted
+    deadline: np.ndarray     # (n_jobs,) bool: deadline-oriented?
+    _state: np.ndarray       # task state array (shared with tasks)
 
-    def active(self) -> list:
+    @property
+    def n_jobs(self) -> int:
+        return len(self.start)
+
+    def task_ids(self, job: int) -> np.ndarray:
+        """Original-task ids of ``job`` (contiguous CSR range)."""
+        s = int(self.start[job])
+        return np.arange(s, s + int(self.count[job]), dtype=np.int64)
+
+    def active(self) -> np.ndarray:
         """Jobs with at least one non-terminal original task."""
-        return [j for j, open_n in self._open.items()
-                if open_n > 0 and j not in self._done]
+        return np.nonzero((self.open_count > 0) & ~self.done)[0]
 
-    def incomplete_tasks(self, job: int) -> list:
-        return [i for i in self.tasks[job]
-                if self._state[i] in (PENDING, RUNNING)]
+    def incomplete_tasks(self, job: int) -> np.ndarray:
+        t = self.task_ids(job)
+        # PENDING/RUNNING are the two non-terminal states (0 and 1)
+        return t[self._state[t] <= RUNNING]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,4 +198,5 @@ def make_task_telemetry(n: int, fields: Callable[[str], np.ndarray],
         **{f: readonly(fields(f)) for f in (
             "job_id", "state", "host", "work", "progress", "submit_s",
             "start_s", "finish_s", "deadline_s", "is_deadline",
-            "sla_weight", "restarts", "is_copy", "orig", "delayed_until")})
+            "sla_weight", "restarts", "is_copy", "orig", "delayed_until",
+            "prev_host")})

@@ -41,7 +41,8 @@ from repro.sim.scheduler import Scheduler, UtilizationAwareScheduler
 from repro.sim.workload import WorkloadGenerator
 
 __all__ = ["PENDING", "RUNNING", "DONE", "CANCELLED", "TaskTable",
-           "SimAction", "Technique", "NoMitigation", "Simulation"]
+           "JobTable", "SimAction", "Technique", "NoMitigation",
+           "Simulation"]
 
 
 class TaskTable:
@@ -101,6 +102,61 @@ class TaskTable:
         return getattr(self, field)[:self.n]
 
 
+class JobTable:
+    """CSR job index with amortized growth.
+
+    Job ``j``'s original tasks are the contiguous TaskTable range
+    ``[start[j], start[j] + count[j])`` — arrivals append whole jobs in
+    submission order and speculative copies are never job members — so
+    per-job lookups are O(1) slices and the active-job scan is one
+    vectorized mask over dense arrays (no dict bookkeeping).
+    """
+
+    _F = dict(start=np.int64, count=np.int64, open_count=np.int64,
+              done=bool, deadline=bool)
+
+    def __init__(self, cap: int = 256):
+        self.n = 0
+        self._cap = cap
+        for f, dt in self._F.items():
+            setattr(self, f, np.zeros(cap, dt))
+
+    def _grow(self, need: int) -> None:
+        if self.n + need <= self._cap:
+            return
+        while self.n + need > self._cap:
+            self._cap *= 2
+        for f, dt in self._F.items():
+            a = getattr(self, f)
+            b = np.zeros(self._cap, dt)
+            b[:len(a)] = a
+            setattr(self, f, b)
+
+    def add_batch(self, first_task: np.ndarray, counts: np.ndarray,
+                  deadline: np.ndarray) -> None:
+        n_new = len(counts)
+        if n_new == 0:
+            return
+        self._grow(n_new)
+        idx = np.arange(self.n, self.n + n_new)
+        self.n += n_new
+        self.start[idx] = first_task
+        self.count[idx] = counts
+        self.open_count[idx] = counts
+        self.deadline[idx] = deadline
+
+    def view(self, field: str) -> np.ndarray:
+        return getattr(self, field)[:self.n]
+
+    def task_ids(self, job: int) -> np.ndarray:
+        s = int(self.start[job])
+        return np.arange(s, s + int(self.count[job]), dtype=np.int64)
+
+    def active(self) -> np.ndarray:
+        return np.nonzero((self.open_count[:self.n] > 0)
+                          & ~self.done[:self.n])[0]
+
+
 #: the simulator's historical action type — now the unified vocabulary.
 #: ``SimAction("clone", i, n_clones=2)`` keeps constructing as before.
 SimAction = Action
@@ -151,17 +207,14 @@ class Simulation:
         if hasattr(self.technique, "bind"):  # legacy Technique subclasses
             self.technique.bind(self)
         self.tasks = TaskTable()
+        self.jobs = JobTable()
         self.log = M.MetricsLog()
         self.t = 0  # current interval index
         self.host_ips = cfg.host_ips_array()  # (n_hosts,) MI/s per speed
-        self.job_tasks: dict[int, list[int]] = {}
-        self.job_deadline: dict[int, bool] = {}
-        self.jobs_done: set[int] = set()
-        # incremental job-completion bookkeeping (replaces the per-interval
-        # all-jobs/all-tasks scan): count of non-terminal original tasks per
-        # job, jobs that hit zero this interval, and orig -> copy ids so
-        # first-result-wins cancellation never scans the full task table
-        self._job_open: dict[int, int] = {}
+        # incremental job-completion bookkeeping (no per-interval
+        # all-jobs/all-tasks scan): the JobTable's open counts, jobs that
+        # hit zero this interval, and orig -> copy ids so first-result-wins
+        # cancellation never scans the full task table
         self._jobs_newly_closed: list[int] = []
         self._copy_groups: dict[int, list[int]] = {}
         self.straggler_ma = np.zeros(cfg.n_hosts)
@@ -178,13 +231,12 @@ class Simulation:
     def now_s(self) -> float:
         return self.t * self.cfg.interval_seconds
 
-    def active_jobs(self) -> list[int]:
-        return [j for j, open_n in self._job_open.items()
-                if open_n > 0 and j not in self.jobs_done]
+    def active_jobs(self) -> np.ndarray:
+        return self.jobs.active()
 
-    def job_incomplete_tasks(self, job: int) -> list[int]:
-        return [i for i in self.job_tasks[job]
-                if self.tasks.state[i] in (PENDING, RUNNING)]
+    def job_incomplete_tasks(self, job: int) -> np.ndarray:
+        t = self.jobs.task_ids(job)
+        return t[self.tasks.state[t] <= RUNNING]
 
     def snapshot(self, event: str = EVENT_INTERVAL,
                  new_tasks: np.ndarray | None = None) -> TelemetryView:
@@ -209,8 +261,11 @@ class Simulation:
                 downtime=readonly(c.downtime),
                 ips=readonly(self.host_ips)),
             jobs=JobTelemetry(
-                tasks=self.job_tasks, deadline=self.job_deadline,
-                _open=self._job_open, _done=self.jobs_done,
+                start=readonly(self.jobs.view("start")),
+                count=readonly(self.jobs.view("count")),
+                open_count=readonly(self.jobs.view("open_count")),
+                done=readonly(self.jobs.view("done")),
+                deadline=readonly(self.jobs.view("deadline")),
                 _state=tt.view("state")),
             new_tasks=(np.asarray(new_tasks, np.int64)
                        if new_tasks is not None
@@ -249,12 +304,20 @@ class Simulation:
             sla_weight=batch.sla_weight)
         if len(new_idx):
             tt.req[new_idx] = batch.req
-        for i, jid in zip(new_idx, batch.job_ids):
-            jid = int(jid)
-            self.job_tasks.setdefault(jid, []).append(int(i))
-            self._job_open[jid] = self._job_open.get(jid, 0) + 1
-        for jid, dl in zip(batch.job_ids, batch.is_deadline):
-            self.job_deadline[int(jid)] = bool(dl)
+            # whole jobs arrive as contiguous task blocks with dense,
+            # sequential ids — register them in the CSR job table
+            firsts = np.nonzero(np.r_[True,
+                                      batch.job_ids[1:]
+                                      != batch.job_ids[:-1]])[0]
+            counts = np.diff(np.r_[firsts, len(batch.job_ids)])
+            if (batch.job_ids[firsts]
+                    != np.arange(self.jobs.n,
+                                 self.jobs.n + len(firsts))).any():
+                raise AssertionError(
+                    "workload batches must emit dense, sequential job ids "
+                    "with each job's tasks contiguous (CSR job index)")
+            self.jobs.add_batch(new_idx[firsts], counts,
+                                batch.is_deadline[firsts])
 
         # 2. policy submit-time decision point (clone / delay)
         t0 = _time.perf_counter()
@@ -263,34 +326,43 @@ class Simulation:
             self._apply(act)
         submit_overhead = _time.perf_counter() - t0
 
-        # 3. schedule pending tasks whose delay has expired
+        # 3. schedule pending tasks whose delay has expired — one
+        # place_batch call for the whole interval (bitwise-equal to the
+        # old per-task loop), then bounce VM-creation-fault placements
         events = self.faults.interval_events()
-        vm_fault_hosts = {e.host for e in events
-                          if e.kind == FaultKind.VM_CREATION}
+        vm_fault_hosts = [e.host for e in events
+                          if e.kind == FaultKind.VM_CREATION]
         ready = np.nonzero((tt.view("state") == PENDING)
                            & (tt.view("delayed_until") <= self.t))[0]
-        for i in ready:
-            self._place(int(i))
-            if int(tt.host[i]) in vm_fault_hosts:   # VM creation fault:
-                tt.state[i] = PENDING               # bounce to next interval
-                tt.restarts[i] += 1
-                tt.prev_host[i] = tt.host[i]        # avoid on re-place; a
-                tt.host[i] = -1                     # pending task holds no
-                                                    # host (straggler credit)
+        if ready.size:
+            hosts = self.scheduler.place_batch(
+                self.cluster, tt.req[ready], self.rng,
+                exclude=tt.prev_host[ready])
+            tt.host[ready] = hosts
+            tt.state[ready] = RUNNING
+            fresh = ready[tt.start_s[ready] == 0.0]
+            tt.start_s[fresh] = self.now_s
+            if vm_fault_hosts:
+                bounced = ready[np.isin(hosts, vm_fault_hosts)]
+                if bounced.size:                # VM creation fault: bounce
+                    tt.state[bounced] = PENDING  # to next interval; avoid
+                    tt.restarts[bounced] += 1    # the host on re-place; a
+                    tt.prev_host[bounced] = tt.host[bounced]  # pending task
+                    tt.host[bounced] = -1        # holds no host
 
-        # 4. fault events
-        for ev in events:
-            if ev.kind == FaultKind.HOST:
-                self.cluster.fail_host(ev.host, ev.downtime)
-                resident = np.nonzero((tt.view("state") == RUNNING)
-                                      & (tt.view("host") == ev.host))[0]
-                for i in resident:
-                    self._restart(int(i))
+        # 4. fault events: host downtime restarts residents, cloudlet
+        # faults restart sampled active tasks (both batched)
+        failed = [ev for ev in events if ev.kind == FaultKind.HOST]
+        for ev in failed:
+            self.cluster.fail_host(ev.host, ev.downtime)
+        if failed:
+            self._restart_batch(np.nonzero(
+                (tt.view("state") == RUNNING)
+                & np.isin(tt.view("host"),
+                          [ev.host for ev in failed]))[0])
         active = tt.active_mask()
         cl_faults = self.faults.cloudlet_faults(int(active.sum()))
-        for i, f in zip(np.nonzero(active)[0], cl_faults):
-            if f:
-                self._restart(int(i))
+        self._restart_batch(np.nonzero(active)[0][cl_faults])
 
         # 5. policy interval decision point (speculate / rerun): one view
         # feeds telemetry ingestion and the decision — same state, built
@@ -346,7 +418,7 @@ class Simulation:
         s = M.summarize(self.log, self.tasks, self.cfg.interval_seconds,
                         self.cfg.restart_overhead_s)
         s["technique"] = self.technique.name
-        s["jobs_done"] = len(self.jobs_done)
+        s["jobs_done"] = int(self.jobs.view("done").sum())
         return s
 
     # ------------------------------ actions -------------------------------
@@ -384,6 +456,18 @@ class Simulation:
             tt.state[i] = PENDING
             tt.host[i] = -1
 
+    def _restart_batch(self, idx: np.ndarray) -> None:
+        """Fault-path restarts (no forced target): tasks lose progress and
+        re-queue unplaced, remembering the host for re-place avoidance."""
+        if idx.size == 0:
+            return
+        tt = self.tasks
+        tt.progress[idx] = 0.0
+        tt.restarts[idx] += 1
+        tt.prev_host[idx] = tt.host[idx]
+        tt.state[idx] = PENDING
+        tt.host[idx] = -1
+
     def _complete(self, i: int, finish_s: float) -> None:
         tt = self.tasks
         tt.state[i] = DONE
@@ -395,7 +479,7 @@ class Simulation:
                 tt.state[orig] = DONE
                 tt.finish_s[orig] = finish_s
                 # ``orig`` may itself be a copy (a technique speculated on
-                # a running copy): only true originals carry _job_open
+                # a running copy): only true originals carry open counts
                 if not tt.is_copy[orig]:
                     self._close_original(orig)
         else:
@@ -408,9 +492,8 @@ class Simulation:
         """Original task i reached a terminal state: update the per-job open
         count and queue the job for ground-truth accounting at zero."""
         job = int(self.tasks.job_id[i])
-        left = self._job_open.get(job, 0) - 1
-        self._job_open[job] = left
-        if left == 0 and job not in self.jobs_done:
+        self.jobs.open_count[job] -= 1
+        if self.jobs.open_count[job] == 0 and not self.jobs.done[job]:
             self._jobs_newly_closed.append(job)
 
     # ----------------------- job-level bookkeeping ------------------------
@@ -423,7 +506,7 @@ class Simulation:
         k = self.cfg.k
         counts = np.zeros(self.cfg.n_hosts)
         for job in self._jobs_newly_closed:
-            tids = np.asarray(self.job_tasks[job], np.int64)
+            tids = self.jobs.task_ids(job)
             times = np.maximum(tt.finish_s[tids] - tt.submit_s[tids], 1e-3)
             hosts = tt.host[tids].copy()
             a, b = pareto.fit_pareto_np(times)
@@ -433,10 +516,10 @@ class Simulation:
             # don't let the wrap-around credit the last host
             placed = strag & (hosts >= 0)
             np.add.at(counts, hosts[placed], 1)
-            self.jobs_done.add(job)
+            self.jobs.done[job] = True
             self.completed_jobs.append(dict(
                 job=job, t=self.t, times=times, straggler=strag,
-                hosts=hosts, deadline=self.job_deadline[job]))
+                hosts=hosts, deadline=bool(self.jobs.deadline[job])))
         self._jobs_newly_closed = []
         decay = 0.8
         self.straggler_ma = decay * self.straggler_ma + (1 - decay) * counts
@@ -456,7 +539,7 @@ class Simulation:
         dt = self.cfg.interval_seconds
         tt = self.tasks
         tids = np.concatenate(
-            [np.asarray(self.job_tasks[rec["job"]], np.int64)
+            [self.jobs.task_ids(rec["job"])
              for rec in self.completed_jobs])
         flags = np.concatenate(
             [np.asarray(rec["straggler"], bool)

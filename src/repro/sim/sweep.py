@@ -23,10 +23,14 @@ Design notes:
     seeds (7 train / 9 warmup, matching benchmarks) and cached as pickled
     bytes; every cell deserializes a fresh instance, so no mutable technique
     state leaks between cells;
-  * workers are spawned (not forked): JAX runtimes do not survive fork.
+  * workers are spawned (not forked): JAX runtimes do not survive fork —
+    and the pool is *persistent* across ``run()`` calls, so per-worker
+    pretrain/warmup caches and XLA jit caches survive between figure
+    sweeps (``shutdown_pool()`` tears it down explicitly).
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import csv
 import dataclasses
 import multiprocessing
@@ -251,11 +255,17 @@ class SweepResult:
     n_workers: int
 
     def cell(self, scenario: str, technique: str, seed: int) -> CellResult:
-        for c in self.cells:
-            if (c.scenario, c.technique, c.seed) == (scenario, technique,
-                                                     int(seed)):
-                return c
-        raise KeyError((scenario, technique, seed))
+        """O(1) cell lookup (the index is built once, lazily — a Table-4
+        grid is thousands of cells and figure code looks each one up)."""
+        index = self.__dict__.get("_index")
+        if index is None or len(index) != len(self.cells):
+            index = {(c.scenario, c.technique, c.seed): c
+                     for c in self.cells}
+            self.__dict__["_index"] = index
+        try:
+            return index[(scenario, technique, int(seed))]
+        except KeyError:
+            raise KeyError((scenario, technique, seed)) from None
 
     def aggregate(self) -> dict:
         """{(scenario, technique): {metric: {mean, ci95, n}}} over seeds."""
@@ -317,10 +327,40 @@ class SweepResult:
 
 # --------------------------------- runner ----------------------------------
 
+#: persistent spawned worker pool, reused across ``run()`` calls so the
+#: per-process pretrain/warmup caches (and XLA jit caches) survive between
+#: figure sweeps — workers are only respawned when the requested size
+#: changes or a worker died
+_POOL: cf.ProcessPoolExecutor | None = None
+_POOL_WORKERS: int = 0
+
+
+def _pool(n_workers: int) -> cf.ProcessPoolExecutor:
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None and _POOL_WORKERS != n_workers:
+        _POOL.shutdown(wait=True)
+        _POOL = None
+    if _POOL is None:
+        _POOL = cf.ProcessPoolExecutor(
+            max_workers=n_workers,
+            mp_context=multiprocessing.get_context("spawn"))
+        _POOL_WORKERS = n_workers
+    return _POOL
+
+
+def shutdown_pool() -> None:
+    """Tear down the persistent worker pool (frees worker memory; the next
+    parallel ``run()`` respawns cold workers)."""
+    global _POOL
+    if _POOL is not None:
+        _POOL.shutdown(wait=True)
+        _POOL = None
+
+
 def run(spec: SweepSpec) -> SweepResult:
-    """Execute the sweep grid; parallel over a spawned process pool unless
-    ``spec.max_workers <= 1``. Cell order in the result is deterministic
-    (scenario-major, as produced by ``spec.cells()``)."""
+    """Execute the sweep grid; parallel over the persistent spawned process
+    pool unless ``spec.max_workers <= 1``. Cell order in the result is
+    deterministic (scenario-major, as produced by ``spec.cells()``)."""
     cells = spec.cells()
     n_workers = spec.max_workers
     if n_workers is None:
@@ -330,12 +370,13 @@ def run(spec: SweepSpec) -> SweepResult:
         results = [run_cell(spec, *c) for c in cells]
         n_workers = 1
     else:
-        import concurrent.futures as cf
-        ctx = multiprocessing.get_context("spawn")
-        with cf.ProcessPoolExecutor(max_workers=n_workers,
-                                    mp_context=ctx) as ex:
-            results = list(ex.map(_run_cell_star,
-                                  [(spec, *c) for c in cells]))
+        args = [(spec, *c) for c in cells]
+        try:
+            results = list(_pool(n_workers).map(_run_cell_star, args))
+        except cf.process.BrokenProcessPool:
+            # a worker died (OOM/kill): respawn the pool once and retry
+            shutdown_pool()
+            results = list(_pool(n_workers).map(_run_cell_star, args))
     res = SweepResult(spec=spec, cells=results,
                       wall_s=time.perf_counter() - t0, n_workers=n_workers)
     res.write_csv()

@@ -26,18 +26,46 @@ from repro.sim.config import SimConfig
 
 def _host_matrix(view: TelemetryView) -> np.ndarray:
     h = view.hosts
-    return np.asarray(features.host_matrix(
+    return features.host_matrix_np(
         util=np.clip(h.util, 0, 2), cap=h.cap, cost=h.cost,
-        power_max=h.power_max, n_tasks=h.n_tasks))
+        power_max=h.power_max, n_tasks=h.n_tasks)
 
 
-def _task_matrix(view: TelemetryView, tids: list[int]) -> np.ndarray:
+def _prev_host_feature(view: TelemetryView, tids: np.ndarray) -> np.ndarray:
+    """The paper's M_T 'host of the previous interval' column: the current
+    placement while a task holds one, else the host it ran on before its
+    last restart/bounce (``prev_host``) — NOT -1, which read as 'never
+    placed' for every restarted task."""
     tt = view.tasks
-    req = tt.req[tids] if tids else np.zeros((0, 4))
-    prev = np.array([tt.host[i] for i in tids]) if tids else np.zeros(0)
-    return np.asarray(features.task_matrix(
-        req=req, prev_host=prev, n_hosts=view.config.n_hosts,
-        max_tasks=view.config.max_tasks))
+    host = tt.host[tids]
+    return np.where(host >= 0, host, tt.prev_host[tids])
+
+
+def _task_matrix(view: TelemetryView, tids) -> np.ndarray:
+    """Single-job M_T (regression-test surface; the hot path uses
+    :func:`_task_matrices`)."""
+    tids = np.asarray(tids, np.int64)
+    q = len(tids)
+    return features.task_matrix_batch_np(
+        view.tasks.req[tids], _prev_host_feature(view, tids),
+        np.zeros(q, np.int64), np.arange(q), 1,
+        view.config.n_hosts, view.config.max_tasks)[0]
+
+
+def _task_matrices(view: TelemetryView, jobs: np.ndarray) -> np.ndarray:
+    """(len(jobs), max_tasks, TASK_FEATURES) float32 task matrices for a
+    set of jobs, assembled in one CSR-vectorized numpy pass (no per-job
+    list comprehensions, no per-job XLA dispatch)."""
+    starts = view.jobs.start[jobs]
+    counts = view.jobs.count[jobs]
+    rows = np.repeat(np.arange(len(jobs)), counts)
+    offs = (np.arange(int(counts.sum()))
+            - np.repeat(np.cumsum(counts) - counts, counts))
+    tids = np.repeat(starts, counts) + offs
+    return features.task_matrix_batch_np(
+        view.tasks.req[tids], _prev_host_feature(view, tids),
+        rows, offs, len(jobs), view.config.n_hosts,
+        view.config.max_tasks)
 
 
 @register("start", epochs_knob="pretrain_epochs",
@@ -144,16 +172,19 @@ class START(Policy):
             return []
         ctrl = self._ensure_controller(view)
         views = []
-        for job in view.jobs.active():
+        active = view.jobs.active()
+        mts = _task_matrices(view, active) if len(active) else None
+        for job, mt in zip(active, mts if mts is not None else ()):
+            job = int(job)
             inc = view.jobs.incomplete_tasks(job)
-            if not inc:
+            if inc.size == 0:
                 continue
             views.append(JobView(
-                job_id=job, q=len(view.jobs.tasks[job]),
-                deadline_oriented=view.jobs.deadline[job],
-                incomplete_task_ids=inc,
+                job_id=job, q=int(view.jobs.count[job]),
+                deadline_oriented=bool(view.jobs.deadline[job]),
+                incomplete_task_ids=[int(i) for i in inc],
                 task_hosts=[int(view.tasks.host[i]) for i in inc],
-                task_matrix=_task_matrix(view, view.jobs.tasks[job])))
+                task_matrix=mt))
         # target scoring: prefer fast + idle hosts among straggler-MA ties
         h = view.hosts
         load = h.util[:, 0] - 0.5 * (h.speed / h.speed.max())
@@ -215,26 +246,29 @@ class NoOpRecorder(Policy):
 
     def dataset(self, view: TelemetryView):
         from repro.core import pareto
-        xs, ys = [], []
+        recs = view.completed_jobs
+        if not recs:
+            raise RuntimeError("no completed jobs to train on")
         hh = np.stack(self.host_hist)  # (T_total, n, m)
-        for rec in view.completed_jobs:
-            t_end = min(rec["t"], len(hh)) - 1
-            lo = max(0, t_end - self.horizon + 1)
-            seq = hh[lo:t_end + 1]
-            if len(seq) < self.horizon:
-                seq = np.concatenate(
-                    [np.repeat(seq[:1], self.horizon - len(seq), 0), seq])
-            mt = _task_matrix(view, view.jobs.tasks[rec["job"]])
-            x = np.concatenate(
-                [seq.reshape(self.horizon, -1),
-                 np.repeat(mt.reshape(1, -1), self.horizon, 0)], axis=-1)
+        h = self.horizon
+        # per-job trailing host-history windows, left-clamped to hh[0]
+        # (identical data to the old per-job slice + repeat-pad loop),
+        # gathered for every job at once
+        t_end = np.array([min(rec["t"], len(hh)) - 1 for rec in recs])
+        idx = np.maximum(
+            t_end[:, None] + np.arange(-h + 1, 1)[None, :], 0)
+        seqs = hh[idx].reshape(len(recs), h, -1)       # (J, h, n*m)
+        jobs = np.array([rec["job"] for rec in recs], np.int64)
+        mts = _task_matrices(view, jobs).reshape(len(recs), 1, -1)
+        xs = np.concatenate(
+            [seqs, np.repeat(mts, h, axis=1)], axis=-1)  # (J, h, dim)
+        ys = []
+        for rec in recs:
             a, b = pareto.fit_pareto_np(rec["times"])
-            xs.append(x)
             # beta regressed in interval units (predictor beta_scale)
             ys.append([float(a), float(b) / view.interval_seconds])
-        if not xs:
-            raise RuntimeError("no completed jobs to train on")
-        return np.stack(xs, axis=1), np.array(ys, np.float32)
+        return np.ascontiguousarray(xs.transpose(1, 0, 2)), \
+            np.array(ys, np.float32)
 
 
 def pretrain(cfg: SimConfig, epochs: int = 30, lr: float = 1e-3,

@@ -74,10 +74,14 @@ def test_snapshot_job_index_matches_engine():
     sim = Simulation(small(n_hosts=8, n_intervals=20))
     sim.run()
     v = sim.snapshot()
-    assert v.jobs.active() == sim.active_jobs()
+    np.testing.assert_array_equal(v.jobs.active(), sim.active_jobs())
+    assert v.jobs.n_jobs == sim.jobs.n
     for job in v.jobs.active():
-        assert v.jobs.incomplete_tasks(job) \
-            == sim.job_incomplete_tasks(job)
+        job = int(job)
+        np.testing.assert_array_equal(v.jobs.incomplete_tasks(job),
+                                      sim.job_incomplete_tasks(job))
+        np.testing.assert_array_equal(v.jobs.task_ids(job),
+                                      sim.jobs.task_ids(job))
 
 
 def test_no_engine_internals_in_policy_modules():

@@ -56,7 +56,7 @@ def test_completed_job_accounting():
     for rec in sim.completed_jobs:
         assert (rec["times"] > 0).all()
         assert rec["straggler"].shape == rec["times"].shape
-        assert len(sim.job_tasks[rec["job"]]) == len(rec["times"])
+        assert len(sim.jobs.task_ids(rec["job"])) == len(rec["times"])
 
 
 def test_heterogeneous_hosts_exist():

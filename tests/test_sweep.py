@@ -243,15 +243,16 @@ def test_no_original_task_lost_across_restarts_and_bounces():
     states = tt.view("state")[orig]
     assert set(np.unique(states)) <= {E.PENDING, E.RUNNING, E.DONE}
     # incremental per-job open counts agree with the task table
-    for job, tids in sim.job_tasks.items():
-        open_n = int(np.isin(tt.state[np.asarray(tids)],
+    for job in range(sim.jobs.n):
+        tids = sim.jobs.task_ids(job)
+        open_n = int(np.isin(tt.state[tids],
                              [E.PENDING, E.RUNNING]).sum())
-        assert sim._job_open[job] == open_n, job
-        if job in sim.jobs_done:
+        assert sim.jobs.open_count[job] == open_n, job
+        if sim.jobs.done[job]:
             assert open_n == 0
     # every accounted job's tasks are all terminal-done
     for rec in sim.completed_jobs:
-        tids = np.asarray(sim.job_tasks[rec["job"]])
+        tids = sim.jobs.task_ids(rec["job"])
         assert (tt.state[tids] == E.DONE).all()
         assert (rec["times"] > 0).all()
 
@@ -279,13 +280,13 @@ def test_copy_of_copy_speculation_keeps_job_accounting_sound():
     copies = np.nonzero(tt.view("is_copy"))[0]
     assert any(tt.is_copy[int(tt.orig[c])] for c in copies)
     # per-job open counts never go negative and match the task table
-    for job, tids in sim.job_tasks.items():
-        open_n = int(np.isin(tt.state[np.asarray(tids)],
+    for job in range(sim.jobs.n):
+        open_n = int(np.isin(tt.state[sim.jobs.task_ids(job)],
                              [E.PENDING, E.RUNNING]).sum())
-        assert sim._job_open[job] == open_n, job
+        assert sim.jobs.open_count[job] == open_n, job
     # no job was accounted while an original was still incomplete
     for rec in sim.completed_jobs:
-        tids = np.asarray(sim.job_tasks[rec["job"]])
+        tids = sim.jobs.task_ids(rec["job"])
         assert (tt.state[tids] == E.DONE).all()
         assert (tt.finish_s[tids] >= 0).all()
 
@@ -299,7 +300,7 @@ def test_actual_stragglers_matches_naive_reference():
     dt = sim.cfg.interval_seconds
     tt = sim.tasks
     for rec in sim.completed_jobs:
-        for i, is_s in zip(sim.job_tasks[rec["job"]], rec["straggler"]):
+        for i, is_s in zip(sim.jobs.task_ids(rec["job"]), rec["straggler"]):
             if not is_s:
                 continue
             lo = int(tt.submit_s[i] // dt)
