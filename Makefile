@@ -2,7 +2,8 @@
 
 PY := python
 
-.PHONY: test test-all lint sweep-bench engine-bench bench
+.PHONY: test test-all lint sweep-bench engine-bench bench regen-golden \
+	nightly-grid
 
 test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -21,3 +22,9 @@ engine-bench:  ## single-cell (planetlab x start) benchmark -> BENCH_engine.json
 
 bench:  ## paper figure reproductions (scaled-down)
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+regen-golden:  ## re-bless tests/data/determinism_golden.json (intentional!)
+	PYTHONPATH=src $(PY) benchmarks/regen_golden.py
+
+nightly-grid:  ## Table-4-scale full-field sweep (what the nightly lane runs)
+	PYTHONPATH=src $(PY) benchmarks/nightly_grid.py

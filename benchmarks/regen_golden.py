@@ -1,0 +1,71 @@
+"""Regenerate the determinism golden fixture (tests/data/).
+
+The fixture pins the deterministic summary of every registered simulator
+technique across every scenario in the registry, at a fixed small grid
+size.  ``tests/test_policy_api.py`` re-runs the same grid and compares
+bitwise — any engine/policy change that shifts a number must either be
+fixed or *intentionally re-blessed* by re-running this script and
+committing the diff:
+
+    PYTHONPATH=src python benchmarks/regen_golden.py [--workers N]
+
+The grid definition lives here (and is embedded in the fixture under
+``_grid``, which the test replays), so the blessing path and the
+checking path can never drift apart.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.sim import scenarios, sweep  # noqa: E402
+import repro.sim.techniques as T  # noqa: E402
+
+FIXTURE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "data",
+    "determinism_golden.json")
+
+#: the blessed grid — every registered sim technique x every scenario
+GRID = dict(
+    techniques=T.FIELD,
+    scenarios=tuple(scenarios.names()),
+    seeds=(0,),
+    n_hosts=12, n_intervals=40, arrival_rate=0.8,
+    pretrain_epochs=4, igru_epochs=20,
+)
+
+
+def golden_spec(max_workers: int | None = 1) -> sweep.SweepSpec:
+    return sweep.SweepSpec(max_workers=max_workers, **GRID)
+
+
+def main(argv=None) -> str:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=os.cpu_count(),
+                    help="parallel workers (parallel == serial bitwise)")
+    args = ap.parse_args(argv)
+
+    spec = golden_spec(max_workers=args.workers)
+    res = sweep.run(spec)
+    cells = {f"{c.scenario}|{c.technique}|{c.seed}":
+             sweep.deterministic_summary(c.summary) for c in res.cells}
+    grid = {k: (list(v) if isinstance(v, tuple) else v)
+            for k, v in GRID.items()}
+    with open(FIXTURE, "w") as f:
+        json.dump({"_grid": grid, "cells": cells}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    sweep.shutdown_pool()
+    print(f"blessed {len(cells)} cells "
+          f"({len(spec.techniques)} techniques x "
+          f"{len(spec.scenarios)} scenarios) -> {FIXTURE}")
+    return FIXTURE
+
+
+if __name__ == "__main__":
+    main()

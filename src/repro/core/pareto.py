@@ -38,6 +38,25 @@ def pareto_mean(alpha: jax.Array, beta: jax.Array) -> jax.Array:
     return alpha * beta / (alpha - 1.0)
 
 
+def pareto_quantile(alpha: jax.Array, beta: jax.Array,
+                    q: jax.Array) -> jax.Array:
+    """Inverse CDF: the time by which a fraction ``q`` of tasks complete.
+
+    F^{-1}(q) = beta * (1 - q)^(-1/alpha).  This is the fork-point clock
+    of the replication-timing policies (Wang et al.): "launch replicas
+    once a fraction p of the job is done" happens, in distribution, at
+    the p-quantile of the fitted execution-time tail.
+    """
+    q = jnp.clip(jnp.asarray(q), 0.0, 1.0 - _EPS)
+    return beta * (1.0 - q) ** (-1.0 / alpha)
+
+
+def pareto_quantile_np(alpha, beta, q):
+    """NumPy twin of :func:`pareto_quantile` for per-interval hot loops."""
+    q = np.clip(np.asarray(q, np.float64), 0.0, 1.0 - _EPS)
+    return beta * (1.0 - q) ** (-1.0 / alpha)
+
+
 def sample_pareto(key: jax.Array, alpha: jax.Array, beta: jax.Array,
                   shape: tuple) -> jax.Array:
     """Inverse-CDF sampling: X = beta * U^(-1/alpha)."""

@@ -160,6 +160,14 @@ class StragglerRuntime:
         self._util = np.zeros((cfg.n_hosts, 4))
         self._win_elapsed = np.zeros(cfg.n_hosts)  # normalized seconds
         self._win_steps = 0
+        # executed-action counters + the per-step synchronization barrier
+        # (max step time over surviving hosts, with a backed-up shard
+        # finishing at its backup host's pace) — the comparison surface
+        # for running several policies over one trace (pod baseline grid)
+        self.action_counts: dict[str, int] = {"backup_shard": 0,
+                                              "evict": 0}
+        self.sync_barrier_s: list[float] = []
+        self._pending_backups: dict[int, int] = {}  # host -> backup
 
     # ------------------------------ telemetry ------------------------------
 
@@ -170,6 +178,21 @@ class StragglerRuntime:
         n = cfg.n_hosts
         st = np.asarray(step_times_s, float)
         self.step_times.append(st)
+        # barrier accounting: backups issued at the previous decide()
+        # apply to THIS step — a backed-up shard is done when either the
+        # owner or its backup host finishes.  Re-validate against the
+        # eviction set: a backup host chosen early in a decide() round
+        # may have been evicted by a later action in the same round
+        eff = st.copy()
+        for h, b in self._pending_backups.items():
+            if b not in self.evicted:
+                eff[h] = min(eff[h], st[b])
+        self._pending_backups = {}
+        alive = np.ones(n, bool)
+        if self.evicted:
+            alive[list(self.evicted)] = False
+        self.sync_barrier_s.append(
+            float(eff[alive].max()) if alive.any() else 0.0)
         med = np.median(st[st > 0]) if (st > 0).any() else 1.0
         rel = st / max(med, 1e-9)
         mem = mem_util if mem_util is not None else np.zeros(n)
@@ -309,14 +332,34 @@ class StragglerRuntime:
             acted.add(h)
             if kind is ActionKind.EVICT:
                 self.evicted.add(h)
+                self.action_counts["evict"] += 1
                 out.append(host_action(ActionKind.EVICT, h))
             else:
                 if backup is None or backup == h \
                         or backup in self.evicted:
                     backup = self._pick_backup(h)
+                self.action_counts["backup_shard"] += 1
+                self._pending_backups[h] = backup
                 out.append(host_action(ActionKind.BACKUP_SHARD, h,
                                        backup=backup))
         return out
+
+    def summary(self) -> dict:
+        """Comparison metrics for one policy over one step trace: how
+        often it acted, whom it dropped, and the synchronization barrier
+        the pod actually paid (per-step max over surviving hosts, after
+        crediting backup shards issued at the previous step's decide)."""
+        bar = np.asarray(self.sync_barrier_s, float)
+        return {
+            "policy": getattr(self.policy, "name", "?"),
+            "steps": self.t,
+            "backup_shards": self.action_counts["backup_shard"],
+            "evictions": self.action_counts["evict"],
+            "evicted_hosts": sorted(self.evicted),
+            "mean_sync_barrier_s": float(bar.mean()) if bar.size else 0.0,
+            "p95_sync_barrier_s": (float(np.percentile(bar, 95))
+                                   if bar.size else 0.0),
+        }
 
 
 def pretrain_igru_pod(tech, runtime: StragglerRuntime,

@@ -38,18 +38,23 @@ Worked example — a complete, sweep-ready technique in ~25 lines::
 Policies that need offline training implement the
 :class:`Pretrainable` protocol — a ``pretrain(ctx)`` classmethod —
 and the registry entry carries it, so sweep runners pretrain (and cache
-per process) without knowing any technique by name::
+per process) without knowing any technique by name.  Forward
+``ctx.kwargs`` to the constructor: that is how per-technique sweep
+knobs (``SweepSpec.technique_kwargs``) reach a pretrained instance —
+a classmethod that drops them silently pins the policy to its
+defaults for every sweep cell::
 
     @policy.register("learned", epochs_knob="pretrain_epochs")
     class Learned(policy.Policy):
-        def __init__(self, model=None):
+        def __init__(self, model=None, threshold=0.5):
             self.model = model
+            self.threshold = threshold
 
         @classmethod
         def pretrain(cls, ctx):
             warm = ctx.warmup()          # finished warmup TelemetryView
             model = fit(warm.completed_jobs, epochs=ctx.epochs or 10)
-            return cls(model=model)
+            return cls(model=model, **ctx.kwargs)
 """
 from repro.policy.actions import (Action, ActionKind, HOST_KINDS,
                                   TASK_KINDS, host_action)

@@ -40,12 +40,17 @@ class PretrainContext:
     finished warmup run as a ``TelemetryView`` (runners cache it so
     several policies can share one warmup).  ``epochs`` is the value of
     the entry's ``epochs_knob`` (``None`` when the entry declares no
-    knob — the policy falls back to its own default).
+    knob — the policy falls back to its own default).  ``kwargs`` are
+    constructor keywords the runner wants the trained instance built
+    with (``SweepSpec.technique_kwargs``): pretrain classmethods forward
+    them — ``cls(..., **ctx.kwargs)`` — so a policy's knobs stay
+    sweepable even on the pretrained path.
     """
 
     config: Any
     epochs: int | None = None
     warmup: Callable[[], Any] | None = None
+    kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)

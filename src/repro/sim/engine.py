@@ -472,21 +472,27 @@ class Simulation:
         tt = self.tasks
         tt.state[i] = DONE
         tt.finish_s[i] = finish_s
-        # first-result-wins across {original, copies}
-        orig = int(tt.orig[i]) if tt.is_copy[i] else i
-        if tt.is_copy[i]:
-            if tt.state[orig] in (PENDING, RUNNING):
-                tt.state[orig] = DONE
-                tt.finish_s[orig] = finish_s
-                # ``orig`` may itself be a copy (a technique speculated on
-                # a running copy): only true originals carry open counts
-                if not tt.is_copy[orig]:
-                    self._close_original(orig)
-        else:
+        # first-result-wins across the whole copy DAG: techniques may
+        # speculate on running copies, so resolve the chain to the true
+        # original, complete it with the winner's stamp, and cancel every
+        # other member reachable from the root — a one-level cancel would
+        # leave grandchild copies running (and later "completing") after
+        # the logical task is done
+        root = i
+        while tt.is_copy[root]:
+            root = int(tt.orig[root])
+        if root == i:
             self._close_original(i)
-        for g in self._copy_groups.get(orig, ()):
-            if tt.state[g] != DONE:
-                tt.state[g] = CANCELLED
+        elif tt.state[root] in (PENDING, RUNNING):
+            tt.state[root] = DONE
+            tt.finish_s[root] = finish_s
+            self._close_original(root)
+        stack = [root]
+        while stack:
+            for g in self._copy_groups.get(stack.pop(), ()):
+                if tt.state[g] != DONE:
+                    tt.state[g] = CANCELLED
+                stack.append(g)
 
     def _close_original(self, i: int) -> None:
         """Original task i reached a terminal state: update the per-job open

@@ -30,6 +30,7 @@ Design notes:
 """
 from __future__ import annotations
 
+import atexit
 import concurrent.futures as cf
 import csv
 import dataclasses
@@ -81,6 +82,14 @@ class SweepSpec:
     # policies whose registry entry names an ``epochs_knob`` other than
     # the two built-ins above (a dict is accepted, like ``overrides``)
     pretrain_knobs: tuple = ()
+    # per-technique constructor keywords, ((name, ((kw, value), ...)), ...)
+    # — a dict-of-dicts is accepted: technique_kwargs={"single-fork":
+    # {"p": 0.7}} sweeps a policy's own knobs without registering a
+    # variant per setting; pretrained policies receive them through
+    # ``PretrainContext.kwargs`` (their pretrain classmethod must
+    # forward them, ``cls(..., **ctx.kwargs)`` — see the worked example
+    # in ``repro.policy``)
+    technique_kwargs: tuple = ()
     # pretrain on the scenario base config with only dimension-changing
     # overrides (n_hosts/max_tasks, see _PRETRAIN_KEYS) kept — so a sweep
     # over regime/QoS knobs (arrival_rate, reserved_utilization, ...)
@@ -94,6 +103,12 @@ class SweepSpec:
             if isinstance(getattr(self, f), dict):
                 object.__setattr__(self, f,
                                    tuple(getattr(self, f).items()))
+        tk = self.technique_kwargs
+        if isinstance(tk, dict):
+            tk = tuple(tk.items())
+        object.__setattr__(self, "technique_kwargs", tuple(
+            (name, tuple(sorted(kw.items())) if isinstance(kw, dict)
+             else tuple(kw)) for name, kw in tk))
         for f in ("techniques", "seeds", "scenarios", "overrides",
                   "metrics", "pretrain_knobs"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
@@ -103,8 +118,14 @@ class SweepSpec:
         from repro import policy
         import repro.sim.techniques  # noqa: F401  (registers built-ins)
         policy.validate(self.techniques, substrate="sim")
+        policy.validate((n for n, _ in self.technique_kwargs),
+                        substrate="sim")
         for sc in self.scenarios:
             S.get(sc)
+
+    def kwargs_for(self, technique: str) -> dict:
+        """Constructor keywords declared for ``technique`` (maybe {})."""
+        return dict(dict(self.technique_kwargs).get(technique, ()))
 
     def cells(self) -> list[tuple[str, str, int]]:
         return [(sc, tech, int(seed)) for sc in self.scenarios
@@ -175,7 +196,8 @@ def _warm_view(cfg: SimConfig):
 def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
                    pretrain_epochs: int = 8,
                    igru_epochs: int = 40,
-                   extra_knobs: dict | None = None) -> Policy:
+                   extra_knobs: dict | None = None,
+                   technique_kwargs: dict | None = None) -> Policy:
     """Fresh technique instance for one cell.
 
     Dispatch is fully generic: the registry entry says whether (and how)
@@ -184,18 +206,21 @@ def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
     feeds it (one of this function's two built-in keywords, or a key in
     ``extra_knobs`` — SweepSpec's ``pretrain_knobs``; an undeclared knob
     raises rather than silently training at a default).  Trained
-    policies are cached pickled per (name, base config[, epochs]) per
-    process on fixed seeds (7 train / 9 warmup); every call returns a
-    NEW object — safe to bind to a Simulation.  ``pretrain_cfg``
-    decouples the training environment from the cell config
-    (shared-pretrain sweeps).
+    policies are cached pickled per (name, base config[, epochs],
+    kwargs) per process on fixed seeds (7 train / 9 warmup); every call
+    returns a NEW object — safe to bind to a Simulation.
+    ``pretrain_cfg`` decouples the training environment from the cell
+    config (shared-pretrain sweeps).  ``technique_kwargs`` are
+    constructor keywords (SweepSpec's per-technique knobs); pretrained
+    policies receive them via ``PretrainContext.kwargs``.
     """
     from repro import policy
     import repro.sim.techniques  # noqa: F401  (registers built-ins)
 
     entry = policy.registry.get(name)   # ValueError for unknown names
+    tkw = technique_kwargs or {}
     if entry.pretrain is None:
-        return entry.factory()
+        return entry.factory(**tkw)
     pcfg = pretrain_cfg if pretrain_cfg is not None else cfg
     # key on the epoch knob the technique actually consumes, so an
     # irrelevant knob changing doesn't evict/duplicate a trained entry
@@ -209,11 +234,12 @@ def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
             f"it via SweepSpec(pretrain_knobs={{{epochs_knob!r}: ...}}) "
             f"or make_technique(extra_knobs=...)")
     epochs = knobs.get(epochs_knob)
-    key = (name, _base_key(pcfg)) \
+    key = (name, _base_key(pcfg), tuple(sorted(tkw.items()))) \
         + ((epochs,) if epochs_knob else ())
     if key not in _PRETRAINED:
         ctx = PretrainContext(config=pcfg, epochs=epochs,
-                              warmup=lambda: _warm_view(pcfg))
+                              warmup=lambda: _warm_view(pcfg),
+                              kwargs=dict(tkw))
         _PRETRAINED[key] = pickle.dumps(entry.pretrain.fn(ctx))
     return pickle.loads(_PRETRAINED[key])
 
@@ -232,7 +258,8 @@ def run_cell(spec: SweepSpec, scenario: str, technique: str,
     tech = make_technique(technique, cfg, pretrain_cfg=pcfg,
                           pretrain_epochs=spec.pretrain_epochs,
                           igru_epochs=spec.igru_epochs,
-                          extra_knobs=dict(spec.pretrain_knobs))
+                          extra_knobs=dict(spec.pretrain_knobs),
+                          technique_kwargs=spec.kwargs_for(technique))
     t0 = time.perf_counter()
     sim = Simulation(cfg, technique=tech)
     summary = sim.run()
@@ -333,14 +360,22 @@ class SweepResult:
 #: changes or a worker died
 _POOL: cf.ProcessPoolExecutor | None = None
 _POOL_WORKERS: int = 0
+_POOL_ATEXIT_REGISTERED = False
 
 
 def _pool(n_workers: int) -> cf.ProcessPoolExecutor:
-    global _POOL, _POOL_WORKERS
+    global _POOL, _POOL_WORKERS, _POOL_ATEXIT_REGISTERED
     if _POOL is not None and _POOL_WORKERS != n_workers:
         _POOL.shutdown(wait=True)
         _POOL = None
     if _POOL is None:
+        if not _POOL_ATEXIT_REGISTERED:
+            # pool hygiene: the persistent pool outlives every run() call
+            # by design, so callers that never reach shutdown_pool() (CI
+            # runners, the nightly grid, aborted notebooks) must not leak
+            # spawned workers — tear it down at interpreter exit
+            atexit.register(shutdown_pool)
+            _POOL_ATEXIT_REGISTERED = True
         _POOL = cf.ProcessPoolExecutor(
             max_workers=n_workers,
             mp_context=multiprocessing.get_context("spawn"))

@@ -1,4 +1,6 @@
-"""Straggler techniques: START + the paper's six baselines (+ RPPS).
+"""Straggler techniques: START + the paper's six baselines (+ RPPS),
+plus the replication-timing (Wang et al.) and redundancy-level
+(Aktas & Soljanin) families from the wider straggler literature.
 
 Every technique is a :class:`repro.policy.Policy` registered with the
 decorator-based registry (``repro.policy.register``); importing this
@@ -11,6 +13,9 @@ from repro import policy
 from repro.sim.engine import NoMitigation
 from repro.sim.techniques.baselines import (GRASS, SGC, Dolly, IGRUSD,
                                             NearestFit, Wrangler)
+from repro.sim.techniques.replication import (AdaptiveRedundancy,
+                                              FixedRedundancy,
+                                              ForkRelaunch, SingleFork)
 from repro.sim.techniques.rpps import RPPS
 from repro.sim.techniques.start_tech import START
 
@@ -23,6 +28,17 @@ REGISTRY = {name: policy.registry.get(name).factory
 
 BASELINES = ["nearestfit", "dolly", "grass", "sgc", "wrangler", "igru-sd"]
 
+#: the replication-literature field (both substrates)
+REPLICATION = ["single-fork", "fork-relaunch", "redundancy-fixed",
+               "redundancy-adaptive"]
+
+#: the full shipped simulator technique field, in canonical order — the
+#: single source for the golden fixture grid (benchmarks/regen_golden),
+#: the nightly Table-4 grid and the slow invariant grid, so the three
+#: can't silently drift when a technique is added
+FIELD = ("none", "start", "igru-sd", "sgc", "dolly", "grass",
+         "nearestfit", "wrangler", "rpps", *REPLICATION)
+
 
 def make(name: str, **kw):
     """Instantiate a registered technique; unknown names raise a
@@ -30,6 +46,7 @@ def make(name: str, **kw):
     return policy.make(name, **kw)
 
 
-__all__ = ["REGISTRY", "BASELINES", "make", "START", "IGRUSD", "SGC",
-           "Dolly", "GRASS", "NearestFit", "Wrangler", "RPPS",
-           "NoMitigation"]
+__all__ = ["REGISTRY", "BASELINES", "REPLICATION", "FIELD", "make", "START",
+           "IGRUSD", "SGC", "Dolly", "GRASS", "NearestFit", "Wrangler",
+           "RPPS", "NoMitigation", "SingleFork", "ForkRelaunch",
+           "FixedRedundancy", "AdaptiveRedundancy"]

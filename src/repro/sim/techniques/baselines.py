@@ -229,7 +229,7 @@ class Wrangler(Policy):
 
     @classmethod
     def pretrain(cls, ctx: PretrainContext) -> "Wrangler":
-        tech = cls()
+        tech = cls(**ctx.kwargs)   # per-technique sweep knobs
         pretrain_wrangler(tech, ctx.warmup())
         return tech
 
@@ -352,7 +352,7 @@ class IGRUSD(Policy):
 
     @classmethod
     def pretrain(cls, ctx: PretrainContext) -> "IGRUSD":
-        tech = cls()
+        tech = cls(**ctx.kwargs)   # per-technique sweep knobs
         pretrain_igru(tech, ctx.warmup(),
                       epochs=200 if ctx.epochs is None else ctx.epochs)
         return tech

@@ -123,7 +123,8 @@ class START(Policy):
         ctrl = pretrain(dataclasses.replace(ctx.config, seed=7),
                         epochs=30 if ctx.epochs is None else ctx.epochs,
                         lr=1e-3)
-        return cls(controller=ctrl)
+        # ctx.kwargs: per-technique sweep knobs (margin, k_lo, ...)
+        return cls(controller=ctrl, **ctx.kwargs)
 
     # ------------------------------ policy api -----------------------------
 
@@ -232,6 +233,10 @@ def collect_training_data(cfg: SimConfig, horizon: int = 5
     return rec.dataset(sim.snapshot())
 
 
+class EmptyWarmupError(RuntimeError):
+    """The warmup simulation completed no jobs — nothing to fit."""
+
+
 class NoOpRecorder(Policy):
     """Records host matrices + job completions to build the training set."""
 
@@ -248,7 +253,7 @@ class NoOpRecorder(Policy):
         from repro.core import pareto
         recs = view.completed_jobs
         if not recs:
-            raise RuntimeError("no completed jobs to train on")
+            raise EmptyWarmupError("no completed jobs to train on")
         hh = np.stack(self.host_hist)  # (T_total, n, m)
         h = self.horizon
         # per-job trailing host-history windows, left-clamped to hh[0]
@@ -277,8 +282,23 @@ def pretrain(cfg: SimConfig, epochs: int = 30, lr: float = 1e-3,
 
     The paper uses lr = 1e-5 for its long offline phase; benchmarks use a
     larger lr with fewer epochs for wall-clock sanity (same optimizer).
+
+    A saturated training regime (e.g. the overload scenario at small
+    grid sizes) can complete zero jobs in the warmup horizon, leaving
+    nothing to fit — in that case the arrival rate is halved (up to a
+    few times, deterministically) until the warmup yields completions,
+    rather than failing the whole sweep.
     """
-    xs, ys = collect_training_data(cfg)
+    train_cfg = cfg
+    for _ in range(4):
+        try:
+            xs, ys = collect_training_data(train_cfg)
+            break
+        except EmptyWarmupError:
+            train_cfg = dataclasses.replace(
+                train_cfg, arrival_rate=train_cfg.arrival_rate / 2.0)
+    else:
+        xs, ys = collect_training_data(train_cfg)  # raise with context
     ctrl = STARTController(n_hosts=cfg.n_hosts, max_tasks=cfg.max_tasks,
                            k=cfg.k, seed=seed,
                            beta_scale=cfg.interval_seconds)

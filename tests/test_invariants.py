@@ -1,0 +1,166 @@
+"""Property-based simulator invariants over random SweepSpec cells.
+
+The 2-scenario golden fixture pins *determinism*; this harness pins
+*correctness* across the whole spec space: for randomly drawn
+(scenario, technique, seed, load) cells the engine must conserve tasks
+(every submitted original completes at most once, copy groups are
+first-result-wins), keep the CSR job index consistent (``jobs.active()``
+and the done flags partition the JobTable), produce sane QoS numbers
+(finite, non-negative, SLA rate in [0, 1]), and execute a parallel sweep
+bitwise-equal to a serial one.
+
+CI runs the real ``hypothesis`` (requirements-dev.txt); offline the
+conftest stub degrades each property to fixed boundary/midpoint
+examples, so the suite never needs the dependency to collect.
+
+The nightly lane additionally runs the ``slow``-marked full-field grid
+at Table-4-like scale (see ``benchmarks/nightly_grid.py``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import policy
+from repro.sim import Simulation, scenarios, sweep
+from repro.sim.engine import CANCELLED, DONE, PENDING, RUNNING
+
+import repro.sim.techniques  # noqa: F401  (populates the registry)
+
+#: techniques cheap enough to instantiate untrained inside a property
+#: (the pretrained ones are covered by the golden fixture + their own
+#: tests; a hypothesis example must stay sub-second)
+CHEAP_TECHNIQUES = ("none", "sgc", "dolly", "grass", "nearestfit", "rpps",
+                    "single-fork", "fork-relaunch", "redundancy-fixed",
+                    "redundancy-adaptive")
+ALL_SCENARIOS = tuple(scenarios.names())
+
+
+def _run_cell(scenario: str, technique: str, seed: int,
+              arrival_rate: float, n_intervals: int = 14,
+              n_hosts: int = 8):
+    cfg = scenarios.make_config(scenario, seed=seed, n_hosts=n_hosts,
+                                n_intervals=n_intervals,
+                                arrival_rate=arrival_rate)
+    sim = Simulation(cfg, technique=policy.make(technique))
+    summary = sim.run()
+    return sim, summary
+
+
+def assert_engine_invariants(sim: Simulation, summary: dict) -> None:
+    """The properties every finished simulation must satisfy."""
+    tt, jobs = sim.tasks, sim.jobs
+    state = tt.view("state")
+    is_copy = tt.view("is_copy")
+    orig_mask = ~is_copy
+
+    # -- task conservation: originals are never cancelled, and every task
+    # is in exactly one lifecycle state
+    assert set(np.unique(state[orig_mask])) <= {PENDING, RUNNING, DONE}
+    assert set(np.unique(state)) <= {PENDING, RUNNING, DONE, CANCELLED}
+
+    # -- copy groups are first-result-wins: at most one copy finishes,
+    # winners share the original's finish stamp, a finished original
+    # leaves no sibling running
+    copies = np.nonzero(is_copy)[0]
+    groups: dict = {}
+    for c in copies:
+        groups.setdefault(int(tt.orig[c]), []).append(int(c))
+    for orig, group in groups.items():
+        done_copies = [c for c in group if state[c] == DONE]
+        assert len(done_copies) <= 1, (orig, group)
+        if state[orig] == DONE:
+            for c in done_copies:
+                assert tt.finish_s[c] == tt.finish_s[orig]
+            assert all(state[c] in (DONE, CANCELLED) for c in group)
+
+    # -- CSR job index: open counts match the task table; active() and
+    # the done flag partition the JobTable
+    for job in range(jobs.n):
+        tids = jobs.task_ids(job)
+        open_n = int(np.isin(tt.state[tids], [PENDING, RUNNING]).sum())
+        assert jobs.open_count[job] == open_n, job
+        assert jobs.done[job] == (open_n == 0), job
+    active = set(int(j) for j in jobs.active())
+    done_jobs = set(int(j) for j in np.nonzero(jobs.view("done"))[0])
+    assert active.isdisjoint(done_jobs)
+    assert active | done_jobs == set(range(jobs.n))
+
+    # -- every accounted (ground-truth) job is fully terminal, exactly
+    # once per job
+    accounted = [rec["job"] for rec in sim.completed_jobs]
+    assert len(accounted) == len(set(accounted))
+    assert set(accounted) == done_jobs
+    for rec in sim.completed_jobs:
+        tids = jobs.task_ids(rec["job"])
+        assert (tt.state[tids] == DONE).all()
+        assert (np.asarray(rec["times"]) > 0).all()
+
+    # -- QoS sanity
+    for k in sweep.QOS_KEYS:
+        assert np.isfinite(summary[k]), k
+    assert summary["avg_execution_time_s"] >= 0.0
+    assert summary["energy_kwh"] >= 0.0
+    assert 0.0 <= summary["sla_violation_rate"] <= 1.0
+    assert 0 <= summary["tasks_done"] <= summary["tasks_total"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(technique=st.sampled_from(CHEAP_TECHNIQUES),
+       scenario=st.sampled_from(ALL_SCENARIOS),
+       seed=st.integers(0, 2 ** 16),
+       arrival_rate=st.floats(0.2, 1.6))
+def test_engine_invariants_hold_across_the_spec_space(
+        technique, scenario, seed, arrival_rate):
+    sim, summary = _run_cell(scenario, technique, seed, arrival_rate)
+    assert_engine_invariants(sim, summary)
+
+
+@settings(max_examples=5, deadline=None)
+@given(technique=st.sampled_from(("none", "sgc", "redundancy-adaptive")),
+       scenario=st.sampled_from(ALL_SCENARIOS),
+       seed=st.integers(0, 999))
+def test_serial_equals_parallel_for_random_specs(technique, scenario,
+                                                 seed):
+    """Parallel execution over the persistent spawned pool is bitwise
+    identical to in-process serial execution for arbitrary cells (two
+    seeds so the parallel path doesn't short-circuit to serial)."""
+    spec = sweep.SweepSpec(techniques=("none", technique),
+                           seeds=(seed, seed + 1),
+                           scenarios=(scenario,), n_hosts=8,
+                           n_intervals=12, arrival_rate=0.8,
+                           max_workers=1)
+    serial = sweep.run(spec)
+    parallel = sweep.run(dataclasses.replace(spec, max_workers=2))
+    assert parallel.n_workers == 2
+    for a, b in zip(serial.cells, parallel.cells):
+        assert (a.scenario, a.technique, a.seed) \
+            == (b.scenario, b.technique, b.seed)
+        assert sweep.deterministic_summary(a.summary) \
+            == sweep.deterministic_summary(b.summary)
+
+
+# --------------------- nightly full-field grid (slow) -----------------------
+
+@pytest.mark.slow
+def test_full_technique_field_grid_slow():
+    """Every registered sim technique x every scenario at a moderate
+    grid size, each cell checked against the engine invariants — the
+    gating counterpart of the nightly Table-4-scale sweep."""
+    from repro.sim import techniques as T
+    # arrival 0.8 x 40 intervals keeps the overload scenario completing
+    # enough warmup jobs for START's offline pretraining at this size
+    spec = sweep.SweepSpec(techniques=T.FIELD,
+                           seeds=(0,), scenarios=ALL_SCENARIOS,
+                           n_hosts=16, n_intervals=40, arrival_rate=0.8,
+                           pretrain_epochs=2, igru_epochs=10,
+                           max_workers=1)
+    for sc, tech, seed in spec.cells():
+        cfg = spec.cell_config(sc, seed)
+        instance = sweep.make_technique(
+            tech, cfg, pretrain_epochs=spec.pretrain_epochs,
+            igru_epochs=spec.igru_epochs)
+        sim = Simulation(cfg, technique=instance)
+        assert_engine_invariants(sim, sim.run())

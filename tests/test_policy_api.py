@@ -10,7 +10,7 @@ import pytest
 
 from repro import policy
 from repro.policy import Action, ActionKind, Policy
-from repro.sim import Simulation, engine as E, small, sweep
+from repro.sim import Simulation, engine as E, scenarios, small, sweep
 from repro.sim.techniques.start_tech import START
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -254,34 +254,30 @@ def test_custom_epochs_knob_is_explicit_not_silently_dropped():
 GOLDEN = os.path.join(HERE, "data", "determinism_golden.json")
 
 
-def test_all_techniques_match_pre_port_golden_summaries():
-    """The port of all techniques (and the engine's policy-view plumbing)
-    is behavior-preserving: every (scenario, technique) cell reproduces
-    the pre-refactor deterministic summary bitwise.  START runs with
-    ``margin=0.25`` and the legacy k-adaptation curve (1.1 + 0.8*util),
-    the exact legacy behavior, since the regime-adaptive margin/k are a
-    deliberate behavior change."""
+def test_all_techniques_match_golden_summaries_on_all_scenarios():
+    """Determinism regression over the full registered technique field x
+    every scenario: each cell must reproduce the blessed deterministic
+    summary bitwise.  The fixture embeds its own grid (``_grid``), which
+    this test replays verbatim, so checking and blessing can never drift
+    — an intentional behavior change is re-blessed by running
+    ``benchmarks/regen_golden.py`` and committing the fixture diff."""
     with open(GOLDEN) as f:
         golden = json.load(f)
-    spec = sweep.SweepSpec(
-        techniques=("none", "start", "igru-sd", "sgc", "dolly", "grass",
-                    "nearestfit", "wrangler", "rpps"),
-        seeds=(0,), scenarios=("planetlab", "heavy-tail"),
-        n_hosts=12, n_intervals=40, arrival_rate=0.8,
-        max_workers=1, pretrain_epochs=4, igru_epochs=20)
-    assert len(golden) == len(spec.cells())
+    grid = {k: (tuple(v) if isinstance(v, list) else v)
+            for k, v in golden["_grid"].items()}
+    spec = sweep.SweepSpec(max_workers=1, **grid)
+    cells = golden["cells"]
+    assert len(cells) == len(spec.cells())
+    # the fixture covers every technique currently registered for the
+    # simulator that ships with the package (test-registered policies in
+    # this module are exempt)
+    shipped = [n for n in policy.names("sim") if not n.startswith("test-")]
+    assert sorted(shipped) == sorted(spec.techniques)
+    assert sorted(spec.scenarios) == sorted(scenarios.names())
     for sc, name, seed in spec.cells():
-        want = golden[f"{sc}|{name}|{seed}"]
-        if name == "start":
-            cfg = spec.cell_config(sc, seed)
-            pre = sweep.make_technique("start", cfg, pretrain_epochs=4)
-            tech = START(controller=pre._controller, margin=0.25,
-                         k_lo=1.1, k_hi=1.9)
-            got = sweep.deterministic_summary(
-                Simulation(cfg, technique=tech).run())
-        else:
-            got = sweep.deterministic_summary(
-                sweep.run_cell(spec, sc, name, seed).summary)
+        want = cells[f"{sc}|{name}|{seed}"]
+        got = sweep.deterministic_summary(
+            sweep.run_cell(spec, sc, name, seed).summary)
         assert got == want, (sc, name)
 
 

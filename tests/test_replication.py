@@ -1,0 +1,271 @@
+"""Replication-timing (Wang et al.) and redundancy-level (Aktas &
+Soljanin) policy families: registry wiring, the tail-adaptive fork-point
+model, end-to-end behavior on the simulator, per-technique knob plumbing
+through SweepSpec, and the action translation on the pod substrate."""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro import policy
+from repro.core import pareto
+from repro.sim import Simulation, small, sweep
+from repro.sim.techniques.replication import (MIN_TAIL_SAMPLES, P_GRID,
+                                              AdaptiveRedundancy,
+                                              FixedRedundancy,
+                                              ForkRelaunch, SingleFork,
+                                              fork_fraction,
+                                              fork_objective)
+
+NEW_POLICIES = ("single-fork", "fork-relaunch", "redundancy-fixed",
+                "redundancy-adaptive")
+
+
+def _faultless(**kw):
+    base = dict(n_hosts=10, n_intervals=40, fault_host_rate=0.0,
+                fault_task_rate=0.0, fault_vm_creation_rate=0.0)
+    base.update(kw)
+    return small(**base)
+
+
+# ------------------------------ registry -----------------------------------
+
+def test_families_are_registered_for_both_substrates():
+    import repro.sim.techniques  # noqa: F401  (registers built-ins)
+    for name in NEW_POLICIES:
+        entry = policy.get(name)
+        assert entry.substrates == ("sim", "pod"), name
+        assert entry.description, name
+    # the fork policies seed their tail estimate offline; the upfront
+    # redundancy policies have nothing to train
+    assert policy.get("single-fork").pretrain is not None
+    assert policy.get("fork-relaunch").pretrain is not None
+    assert policy.get("redundancy-fixed").pretrain is None
+    assert policy.get("redundancy-adaptive").pretrain is None
+
+
+# ------------------------ fork-point quantile model -------------------------
+
+def test_pareto_quantile_np_matches_jax_twin_and_inverts_cdf():
+    rng = np.random.default_rng(0)
+    for alpha, beta in ((1.3, 2.0), (2.2, 300.0)):
+        q = rng.uniform(0.05, 0.95, 16)
+        x_np = pareto.pareto_quantile_np(alpha, beta, q)
+        x_j = np.asarray(pareto.pareto_quantile(alpha, beta, q))
+        np.testing.assert_allclose(x_np, x_j, rtol=1e-5)
+        # F(F^-1(q)) == q
+        np.testing.assert_allclose(
+            np.asarray(pareto.pareto_cdf(x_np, alpha, beta)), q,
+            rtol=1e-5)
+        assert (x_np >= beta).all()
+
+
+def test_fork_fraction_tracks_the_latency_vs_cost_knob():
+    for alpha in (1.2, 2.0, 4.0):
+        ps = [fork_fraction(alpha, w, kill=False)
+              for w in (0.0, 0.5, 1.0, 3.0)]
+        # paying more for cost replicates later, never earlier
+        assert ps == sorted(ps), (alpha, ps)
+        assert all(P_GRID[0] <= p <= P_GRID[-1] for p in ps)
+        # killing forfeits progress, so the kill variant forks later (or
+        # at worst at the same point)
+        assert fork_fraction(alpha, 0.5, kill=True) >= \
+            fork_fraction(alpha, 0.5, kill=False)
+    # the objective is finite everywhere on the grid
+    assert np.isfinite(fork_objective(1.2, P_GRID, 3.0, True)).all()
+    assert np.isfinite(fork_objective(4.0, P_GRID, 0.0, False)).all()
+
+
+# ------------------------------ simulator ----------------------------------
+
+def test_single_fork_speculates_and_latches_once_per_job():
+    tech = SingleFork(p=0.5)
+    sim = Simulation(_faultless(), technique=tech)
+    s = sim.run()
+    tt = sim.tasks
+    assert s["tasks_done"] > 0
+    assert tt.view("is_copy").sum() > 0          # tail tasks were raced
+    assert tt.view("restarts").sum() == 0        # no-kill variant
+    assert len(tech._forked) > 0
+    # the single-fork latch: no job's original tasks gained more than one
+    # copy generation (each original has at most 1 speculative copy)
+    orig_of_copies = tt.view("orig")[tt.view("is_copy")]
+    uniq, cnt = np.unique(orig_of_copies, return_counts=True)
+    assert (cnt == 1).all()
+
+
+def test_fork_relaunch_kills_instead_of_racing():
+    tech = ForkRelaunch(p=0.5)
+    sim = Simulation(_faultless(), technique=tech)
+    s = sim.run()
+    tt = sim.tasks
+    assert s["tasks_done"] > 0
+    assert tt.view("is_copy").sum() == 0         # never clones
+    assert tt.view("restarts").sum() > 0         # relaunched the tail
+    assert len(tech._forked) > 0
+
+
+def test_fork_waits_for_tail_evidence():
+    """With no pinned p, no pretrained tail and no completions yet, the
+    policy must not fork blind."""
+    tech = SingleFork()
+    sim = Simulation(_faultless(n_intervals=1), technique=tech)
+    sim.run()
+    assert sim.tasks.view("is_copy").sum() == 0
+    assert tech._tail(sim.snapshot()) is None or \
+        int((sim.tasks.view("state") == 2).sum()) >= MIN_TAIL_SAMPLES
+
+
+def test_redundancy_fixed_clones_every_task_upfront():
+    sim = Simulation(_faultless(), technique=FixedRedundancy(r=2))
+    sim.run()
+    tt = sim.tasks
+    n_orig = int((~tt.view("is_copy")).sum())
+    n_copy = int(tt.view("is_copy").sum())
+    assert n_copy == n_orig                      # r=2 -> one clone each
+    # clones are born at submit time with their original
+    copies = np.nonzero(tt.view("is_copy"))[0]
+    origs = tt.view("orig")[copies]
+    np.testing.assert_array_equal(tt.view("submit_s")[copies],
+                                  tt.view("submit_s")[origs])
+
+
+def test_adaptive_redundancy_backs_off_with_utilization():
+    tech = AdaptiveRedundancy(r_max=3.0, util_knee=0.7)
+    hosts = types.SimpleNamespace(util=np.zeros((8, 4)))
+    cfg = types.SimpleNamespace(reserved_utilization=0.0)
+    view = types.SimpleNamespace(hosts=hosts, config=cfg)
+    assert tech._level(view) == pytest.approx(3.0)          # idle: r_max
+    hosts.util = np.full((8, 4), 0.35)
+    assert tech._level(view) == pytest.approx(2.0)          # half knee
+    hosts.util = np.full((8, 4), 0.9)
+    assert tech._level(view) == pytest.approx(1.0)          # saturated
+    # the reserved floor is subtracted (task-attributable utilization)
+    cfg.reserved_utilization = 0.35
+    assert tech._level(view) > 1.0
+    hosts.util = np.full((8, 4), 0.35)
+    assert tech._level(view) == pytest.approx(3.0)
+
+
+def test_adaptive_redundancy_clones_less_than_fixed_under_load():
+    cfg = _faultless(arrival_rate=1.6)
+    fixed = Simulation(dataclasses.replace(cfg),
+                       technique=FixedRedundancy(r=3))
+    fixed.run()
+    adaptive = Simulation(dataclasses.replace(cfg),
+                          technique=AdaptiveRedundancy(r_max=3.0))
+    adaptive.run()
+    assert adaptive.tasks.view("is_copy").sum() \
+        < fixed.tasks.view("is_copy").sum()
+
+
+# --------------------------- sweep integration ------------------------------
+
+def test_all_four_run_through_sweepspec():
+    spec = sweep.SweepSpec(techniques=("none",) + NEW_POLICIES,
+                           seeds=(0,), scenarios=("heavy-tail",),
+                           n_hosts=10, n_intervals=20, arrival_rate=0.8,
+                           max_workers=1)
+    res = sweep.run(spec)
+    for name in NEW_POLICIES:
+        c = res.cell("heavy-tail", name, 0)
+        assert c.summary["tasks_done"] > 0, name
+        assert 0.0 <= c.summary["sla_violation_rate"] <= 1.0, name
+
+
+def test_technique_kwargs_flow_through_spec_and_pretrain():
+    cfg = small(n_hosts=10, n_intervals=20)
+    # pretrained path: kwargs reach the built instance AND the warmup
+    # seeds the tail estimate
+    t = sweep.make_technique("single-fork", cfg,
+                             technique_kwargs={"p": 0.6,
+                                               "cost_weight": 2.0})
+    assert t.p == 0.6 and t.cost_weight == 2.0
+    assert t.alpha0 is not None and t.beta0 is not None
+    # distinct kwargs get distinct cache entries, same kwargs share one
+    t2 = sweep.make_technique("single-fork", cfg,
+                              technique_kwargs={"p": 0.6,
+                                                "cost_weight": 2.0})
+    assert t2 is not t and t2.alpha0 == t.alpha0 and t2.p == 0.6
+    t3 = sweep.make_technique("single-fork", cfg,
+                              technique_kwargs={"p": 0.9})
+    assert t3.p == 0.9
+    # untrained path + declarative spec spelling
+    spec = sweep.SweepSpec(
+        techniques=("redundancy-fixed",), seeds=(0,),
+        scenarios=("planetlab",), n_hosts=10, n_intervals=15,
+        arrival_rate=0.8, max_workers=1,
+        technique_kwargs={"redundancy-fixed": {"r": 3}})
+    assert spec.kwargs_for("redundancy-fixed") == {"r": 3}
+    assert spec.kwargs_for("none") == {}
+    res = sweep.run(spec)
+    assert res.cells[0].summary["tasks_done"] >= 0
+    # unknown technique names in the kwargs map fail fast
+    with pytest.raises(ValueError, match="registered techniques"):
+        sweep.SweepSpec(technique_kwargs={"bogus": {"r": 2}})
+
+
+def test_technique_kwargs_reach_start_via_pretrain_context():
+    cfg = small(n_hosts=10, n_intervals=20)
+    t = sweep.make_technique("start", cfg, pretrain_epochs=2,
+                             technique_kwargs={"margin": 0.25})
+    assert t.margin == 0.25
+    assert t._controller is not None
+
+
+# ------------------------------ pod substrate -------------------------------
+
+def _pod_trace(n=8, slow=3, factor=2.5, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def step():
+        t = 1.0 + 0.05 * rng.pareto(2.0, n)
+        t[slow] *= factor
+        return t
+
+    return step
+
+
+def _drive(name, steps=25, n=8, **kw):
+    from repro.distributed.straggler_runtime import (RuntimeConfig,
+                                                     StragglerRuntime)
+    rt = StragglerRuntime(RuntimeConfig(n_hosts=n),
+                          policy=policy.make(name, **kw))
+    step = _pod_trace(n=n)
+    acts = []
+    for _ in range(steps):
+        rt.observe_step(step())
+        acts += rt.decide()
+    return rt, acts
+
+
+@pytest.mark.parametrize("name,kind,host_field", [
+    ("single-fork", "backup_shard", "backup_shards"),
+    # the kill variant's adaptive fork point sits above a pod window's
+    # maximum progress fraction — covered by the policy's pod clamp
+    ("fork-relaunch", "evict", "evictions"),
+])
+def test_fork_family_translates_to_pod_verbs(name, kind, host_field):
+    from repro.policy import ActionKind
+    rt, acts = _drive(name)
+    assert acts, name
+    assert {ActionKind(a.kind) for a in acts} == {ActionKind(kind)}
+    assert rt.summary()[host_field] == len(acts)
+    # the chronically slow host is acted on (an occasional Pareto spike
+    # on another host may legitimately cross the fork quantile too)
+    assert 3 in {a.host for a in acts}
+
+
+def test_redundancy_family_backs_up_slowest_hosts_on_pod():
+    rt, acts = _drive("redundancy-fixed")
+    assert acts
+    # r=2 -> exactly one backup per step once telemetry exists
+    assert all(a.kind == "backup_shard" for a in acts)
+    assert rt.summary()["backup_shards"] == rt.t
+    # the slow host dominates the backup set
+    hosts = np.array([a.host for a in acts])
+    assert (hosts == 3).mean() > 0.5
+    rt2, acts2 = _drive("redundancy-adaptive")
+    assert acts2 and all(a.kind == "backup_shard" for a in acts2)
+    assert all(a.backup not in (None, a.host) for a in acts2)
