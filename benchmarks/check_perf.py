@@ -1,0 +1,87 @@
+"""Perf-trajectory regression check for the CI perf-smoke lane.
+
+Compares a freshly produced ``BENCH_engine.json`` against the committed
+baseline (saved aside before the bench overwrote it) and emits
+**non-gating** GitHub warning annotations when the trajectory regresses:
+
+  * warm per-cell wall-clock worse by more than ``--threshold`` (default
+    20% — shared runners are noisy; this flags trends, not blips);
+  * any retraces during warm cells (that one is a hard perf bug: the
+    prediction programs must never recompile in steady state);
+  * predict overhead per interval worse by more than the threshold.
+
+Wall-clock comparisons across different hardware are indicative only —
+the committed baseline may come from a different container than the CI
+runner, so pick a threshold wide enough to absorb the hardware delta
+(the CI lane uses 0.5).  The retrace check is machine-independent and
+is the trustworthy cross-host signal.
+
+Always exits 0 — the lane's job is a visible warning on the PR, not a
+red build.
+
+    python benchmarks/check_perf.py --baseline /tmp/BENCH_engine.base.json \
+        --fresh BENCH_engine.json [--threshold 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def warn(msg: str) -> None:
+    # GitHub Actions annotation; plain stderr elsewhere
+    print(f"::warning title=perf-smoke::{msg}")
+    print(msg, file=sys.stderr)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_engine.json (pre-bench copy)")
+    ap.add_argument("--fresh", default="BENCH_engine.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="fractional wall-clock regression that warns")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to compare")
+        return 0
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    # machine-independent check first — it must run regardless of sizing
+    rt = fresh.get("retraces_during_warm_cells")
+    if rt:
+        warn(f"retraces_during_warm_cells = {rt} (must be 0: a warm "
+             f"sweep worker recompiled a prediction program)")
+    else:
+        print("retraces_during_warm_cells: 0 ok")
+
+    if (base.get("n_hosts"), base.get("n_intervals")) != \
+            (fresh.get("n_hosts"), fresh.get("n_intervals")):
+        print("baseline and fresh bench use different cell sizings; "
+              "skipping wall-clock comparison")
+        return 0
+
+    checked = 0
+    for key in ("warm_wall_s", "predict_ms_per_interval"):
+        b, f_ = base.get(key), fresh.get(key)
+        if not b or not f_:
+            continue
+        checked += 1
+        ratio = f_ / b
+        if ratio > 1.0 + args.threshold:
+            warn(f"{key} regressed {ratio:.2f}x vs committed baseline "
+                 f"({b} -> {f_})")
+        else:
+            print(f"{key}: {b} -> {f_} ({ratio:.2f}x) ok")
+    print(f"checked {checked} wall metrics against {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

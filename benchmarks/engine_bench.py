@@ -7,14 +7,23 @@ artifact to the repo root (``BENCH_engine.json``):
   * ``cold_wall_s``   — first cell in a fresh process (includes the XLA
     compiles for the predict-path batch buckets);
   * ``warm_wall_s``   — steady-state cell (what a persistent sweep worker
-    pays from its second cell on);
+    pays from its second cell on; best of several runs — shared runners
+    are noisy);
   * ``intervals_per_s`` (warm), ``predict_ms_per_interval`` (policy
-    decision overhead, dominated by Encoder-LSTM inference);
-  * ``retraces_during_cell`` + ``buckets`` — ``predict_sequence`` must
-    compile at most once per power-of-two job-batch bucket;
-  * speedups vs the pre-vectorization mainline (constants measured on the
-    same container at the branch point; override with ``--baseline-cold``/
-    ``--baseline-warm`` when re-baselining on other hardware).
+    decision overhead: the fused device step + feature assembly + the
+    Algorithm-1 trigger logic);
+  * ``retraces_during_cell`` + ``buckets`` — the prediction programs
+    (fused step + unfused network) must compile at most once per
+    power-of-two job-batch bucket;
+  * ``fused_step`` — whether the fused per-interval device program was
+    active (the default; ``--no-fused`` measures the historical path,
+    which is bitwise-identical but re-uploads the M_H history and pays
+    ~10 dispatches per interval);
+  * speedups vs two baselines measured on the same container at their
+    branch points: ``baseline_main`` (pre-vectorization mainline) and
+    ``baseline_pr3`` (the PR 3/4 array-native path).  Committed-
+    trajectory numbers from other hardware are kept in the file for
+    cross-reference, speedups are computed against the same-host ones.
 
     PYTHONPATH=src python benchmarks/engine_bench.py [--quick]
 """
@@ -31,6 +40,7 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from common import write_csv  # noqa: E402
 
+from repro.core import predictor as P  # noqa: E402
 from repro.core import encoder_lstm as net  # noqa: E402
 from repro.sim import sweep  # noqa: E402
 from repro.sim.engine import Simulation  # noqa: E402
@@ -43,43 +53,61 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # bookkeeping, per-job jnp feature assembly, eager pareto tail.
 BASELINE_MAIN = {"cold_wall_s": 3.978, "warm_wall_s": 0.561}
 
+# the PR 3/4 array-native path (bucketed jitted inference, host-side
+# feature assembly re-uploaded per interval), re-measured on THIS
+# container at the PR 5 branch point (best-of interleaved runs; the
+# committed trajectory from the PR 3 container read 0.168 s / 2.09 ms).
+BASELINE_PR3 = {"warm_wall_s": 0.149, "predict_ms_per_interval": 1.681,
+                "committed": {"cold_wall_s": 2.061, "warm_wall_s": 0.168,
+                              "predict_ms_per_interval": 2.091}}
 
-def bench_cell(n_hosts: int, n_intervals: int):
+
+def _compiles() -> int:
+    return net.predict_sequence._cache_size() + P.fused_compile_count()
+
+
+def bench_cell(n_hosts: int, n_intervals: int, fused: bool = True):
     spec = SweepSpec(techniques=("start",), seeds=(0,),
                      scenarios=("planetlab",), n_hosts=n_hosts,
                      n_intervals=n_intervals, arrival_rate=0.6,
                      max_workers=1, pretrain_epochs=8)
     cfg = spec.cell_config("planetlab", 0)
+    tkw = {} if fused else {"use_fused_step": False}
+
+    def make():
+        return sweep.make_technique("start", cfg, pretrain_epochs=8,
+                                    technique_kwargs=tkw)
 
     t0 = time.perf_counter()
-    tech = sweep.make_technique("start", cfg, pretrain_epochs=8)
+    tech = make()
     pretrain_s = time.perf_counter() - t0
 
-    compiles_before = net.predict_sequence._cache_size()
+    compiles_before = _compiles()
     t0 = time.perf_counter()
     sim = Simulation(cfg, technique=tech)
     sim.run()
     cold_wall_s = time.perf_counter() - t0
-    retraces = net.predict_sequence._cache_size() - compiles_before
+    retraces = _compiles() - compiles_before
 
     # steady state: what a persistent sweep worker pays per cell once the
     # jit caches are warm (fresh technique instance, same trained params)
-    warm_walls = []
-    for _ in range(3):
-        tech = sweep.make_technique("start", cfg, pretrain_epochs=8)
+    warm_walls, predict_ms_runs = [], []
+    for _ in range(4):
+        tech = make()
         t0 = time.perf_counter()
         sim = Simulation(cfg, technique=tech)
         sim.run()
         warm_walls.append(time.perf_counter() - t0)
+        predict_ms_runs.append(float(np.mean(sim.log.overhead_s)) * 1e3)
     warm_wall_s = float(min(warm_walls))
-    warm_retraces = (net.predict_sequence._cache_size()
-                     - compiles_before - retraces)
+    predict_ms = float(min(predict_ms_runs))
+    warm_retraces = _compiles() - compiles_before - retraces
 
-    predict_ms = float(np.mean(sim.log.overhead_s) * 1e3)
     buckets = sorted(tech._controller.predictor.buckets_used)
     return dict(
         bench="planetlab-x-start",
         n_hosts=n_hosts, n_intervals=n_intervals, arrival_rate=0.6,
+        fused_step=fused,
         pretrain_s=round(pretrain_s, 3),
         cold_wall_s=round(cold_wall_s, 3),
         warm_wall_s=round(warm_wall_s, 3),
@@ -97,24 +125,36 @@ def main(argv=None) -> dict:
                     help="smaller cell for CI smoke runs")
     ap.add_argument("--hosts", type=int, default=None)
     ap.add_argument("--intervals", type=int, default=None)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="measure the historical (unfused) predict path")
     ap.add_argument("--baseline-cold", type=float,
                     default=BASELINE_MAIN["cold_wall_s"])
     ap.add_argument("--baseline-warm", type=float,
                     default=BASELINE_MAIN["warm_wall_s"])
+    ap.add_argument("--baseline-pr3-warm", type=float,
+                    default=BASELINE_PR3["warm_wall_s"],
+                    help="re-baseline when benching on other hardware")
     args = ap.parse_args(argv)
 
     n_hosts = args.hosts or (16 if args.quick else 32)
     n_intervals = args.intervals or (36 if args.quick else 72)
-    out = bench_cell(n_hosts, n_intervals)
+    out = bench_cell(n_hosts, n_intervals, fused=not args.no_fused)
     default_sizing = n_hosts == 32 and n_intervals == 72
     out["baseline_main"] = ({"cold_wall_s": args.baseline_cold,
                              "warm_wall_s": args.baseline_warm}
                             if default_sizing else None)
     if default_sizing:  # speedups only comparable at the measured sizing
+        out["baseline_pr3"] = dict(BASELINE_PR3,
+                                   warm_wall_s=args.baseline_pr3_warm)
         out["speedup_cold"] = round(args.baseline_cold
                                     / out["cold_wall_s"], 2)
         out["speedup_warm"] = round(args.baseline_warm
                                     / out["warm_wall_s"], 2)
+        out["speedup_warm_vs_pr3"] = round(args.baseline_pr3_warm
+                                           / out["warm_wall_s"], 2)
+        out["predict_speedup_vs_pr3"] = round(
+            BASELINE_PR3["predict_ms_per_interval"]
+            / out["predict_ms_per_interval"], 2)
 
     path = os.path.join(REPO_ROOT, "BENCH_engine.json")
     with open(path, "w") as f:

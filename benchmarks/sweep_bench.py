@@ -1,17 +1,36 @@
 """Serial-vs-parallel benchmark for the scenario-sweep subsystem.
 
-Runs the same SweepSpec grid three times — once with max_workers=1 (the
-old hand-rolled-loop execution model), once over a cold process pool, and
-once more over the now-warm persistent pool (per-worker pretrain/jit
-caches resident) — checks serial and parallel results are bitwise-equal,
-and reports wall-clock speedups plus per-cell engine throughput. Writes
-artifacts/sweep_bench.csv and the repo-root perf-trajectory artifact
-``BENCH_sweep.json``.
+Reports grid *throughput* with one-time costs split out, so steady-state
+scaling is no longer conflated with pool bring-up (the old headline
+"0.24x cold speedup" was almost entirely worker spawn + per-worker
+duplicate pretraining):
+
+  * ``spawn_s``        — bringing up the worker pool (fresh processes,
+    jax + simulator imports), measured by ``sweep.warm_pool``;
+  * ``warmup_s``       — per-worker jit-cache warmup (each worker runs
+    one cell per technique so the XLA compiles of the prediction
+    programs happen once at bring-up, not inside the first grid);
+  * ``pretrain_s``     — parent-side pretraining of every (scenario,
+    technique) that declares it (broadcast to workers as pickled bytes;
+    paid once per process, not once per worker);
+  * ``serial_wall_s``  — the grid run with ``max_workers=1`` after
+    pretraining is cached (pure cell throughput, one lane);
+  * ``parallel_wall_s``      — the first grid over the brought-up pool
+    (grid-cold: none of its cells have run; infra-warm: spawn/warmup/
+    pretrain already paid and reported above);
+  * ``parallel_warm_wall_s`` — and again (what every later figure sweep
+    in the same process pays);
+  * ``parallel_cold_total_s`` — derived worst case for a one-shot cold
+    process: spawn_s + warmup_s + parallel_wall_s;
+  * ``per_cell_warm_s``      — mean/p95 per-cell wall inside the warm
+    parallel run.
+
+Serial and parallel cell summaries are asserted bitwise-equal.  Host
+context (``host_cpus``, ``lanes``) is recorded because the attainable
+speedup at W workers is capped by physical cores — the scheduler adds
+the parent as an extra lane only when cores exceed workers.
 
     PYTHONPATH=src python benchmarks/sweep_bench.py [--quick] [--workers N]
-
-On a 4-core runner the full grid shows >= 2x speedup; --quick shrinks the
-grid for smoke runs.
 """
 from __future__ import annotations
 
@@ -20,29 +39,33 @@ import dataclasses
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from common import write_csv  # noqa: E402
 
-from repro.sim import scenarios  # noqa: E402
-from repro.sim.sweep import (SweepSpec, deterministic_summary,  # noqa: E402
-                             run)
+from repro.sim import scenarios, sweep  # noqa: E402
+from repro.sim.sweep import SweepSpec, deterministic_summary, run  # noqa: E402
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def bench_spec(quick: bool) -> SweepSpec:
+    # `start` is in the grid deliberately: it is the paper's technique and
+    # the one that exercises pretraining, so the parent-train-and-broadcast
+    # path is measured rather than benchmarked around
     return SweepSpec(
-        techniques=("none", "sgc", "dolly") if quick
-        else ("none", "sgc", "dolly", "grass", "nearestfit"),
+        techniques=("none", "sgc", "dolly", "start") if quick
+        else ("none", "sgc", "dolly", "grass", "nearestfit", "start"),
         seeds=(0, 1) if quick else (0, 1, 2, 3),
         scenarios=tuple(scenarios.names())[:4] if quick
         else tuple(scenarios.names()),
         n_hosts=32 if quick else 64,
         n_intervals=72 if quick else 288,
         arrival_rate=0.8 if quick else 1.0,
+        pretrain_epochs=8,
     )
 
 
@@ -56,12 +79,25 @@ def main(argv=None) -> dict:
     spec = bench_spec(args.quick)
     n_workers = args.workers or (os.cpu_count() or 1)
 
-    serial = run(dataclasses.replace(spec, max_workers=1))
+    # one-time costs, measured on their own
+    t0 = time.perf_counter()
+    sweep._build_payloads(spec)
+    pretrain_s = time.perf_counter() - t0
+    sweep.shutdown_pool()
+    spawn_s = sweep.warm_pool(n_workers)
+    # per-worker jit-cache warmup (XLA-compiling the prediction programs
+    # per batch bucket is seconds per worker — one-time, like spawn)
+    warmup_s = sweep.warm_pool_caches(spec, n_workers)
+
+    # grid throughput: serial (one lane, pretrain cached; best of two so
+    # the parent's one-time jit compiles land in the first, discarded run
+    # and shared-runner noise is damped) ...
+    serial = min((run(dataclasses.replace(spec, max_workers=1))
+                  for _ in range(2)), key=lambda r: r.wall_s)
+    # ... vs the fresh pool (worker caches cold) and the warm pool
     parallel = run(dataclasses.replace(spec, max_workers=n_workers))
-    # the persistent pool keeps workers (and their pretrain/jit caches)
-    # alive between run() calls — the second parallel sweep is what every
-    # later figure sweep in the same process pays
-    warm = run(dataclasses.replace(spec, max_workers=n_workers))
+    warm = min((run(dataclasses.replace(spec, max_workers=n_workers))
+                for _ in range(2)), key=lambda r: r.wall_s)
 
     equal = all(deterministic_summary(a.summary)
                 == deterministic_summary(b.summary)
@@ -71,33 +107,54 @@ def main(argv=None) -> dict:
                      for a, b in zip(serial.cells, warm.cells))
     speedup = serial.wall_s / max(parallel.wall_s, 1e-9)
     speedup_warm = serial.wall_s / max(warm.wall_s, 1e-9)
-    cell_s = np.array([c.wall_s for c in serial.cells])
+    cell_s = np.array([c.wall_s for c in warm.cells])
+    cpus = os.cpu_count() or 1
+    lanes = n_workers + (1 if cpus > n_workers else 0)
 
     rows = [
         ["cells", len(serial.cells), ""],
+        ["host_cpus", cpus, ""],
+        ["lanes", lanes, "workers + parent when cores allow"],
+        ["spawn_s", round(spawn_s, 2), "one-time pool bring-up"],
+        ["warmup_s", round(warmup_s, 2),
+         "one-time per-worker jit-cache warmup"],
+        ["pretrain_s", round(pretrain_s, 2),
+         "parent-side, broadcast to workers"],
         ["serial_wall_s", round(serial.wall_s, 2), ""],
         [f"parallel_wall_s (x{parallel.n_workers})",
-         round(parallel.wall_s, 2), ""],
+         round(parallel.wall_s, 2),
+         "first grid after bring-up (one-time costs above)"],
         [f"parallel_warm_wall_s (x{warm.n_workers})",
          round(warm.wall_s, 2), "persistent pool, caches resident"],
+        ["parallel_cold_total_s",
+         round(spawn_s + warmup_s + parallel.wall_s, 2),
+         "derived: one-shot cold process incl. bring-up"],
         ["speedup", round(speedup, 2), ""],
         ["speedup_warm", round(speedup_warm, 2), ""],
         ["bitwise_equal", int(equal and equal_warm), ""],
-        ["cell_wall_s_mean", round(float(cell_s.mean()), 3), ""],
-        ["cell_wall_s_p95", round(float(np.percentile(cell_s, 95)), 3), ""],
+        ["per_cell_warm_s_mean", round(float(cell_s.mean()), 3), ""],
+        ["per_cell_warm_s_p95",
+         round(float(np.percentile(cell_s, 95)), 3), ""],
     ]
     write_csv("sweep_bench.csv", ["metric", "value", "note"], rows)
     bench = {
         "cells": len(serial.cells),
         "workers": parallel.n_workers,
+        "host_cpus": cpus,
+        "lanes": lanes,
+        "spawn_s": round(spawn_s, 3),
+        "warmup_s": round(warmup_s, 3),
+        "pretrain_s": round(pretrain_s, 3),
         "serial_wall_s": round(serial.wall_s, 3),
         "parallel_wall_s": round(parallel.wall_s, 3),
         "parallel_warm_wall_s": round(warm.wall_s, 3),
+        "parallel_cold_total_s": round(
+            spawn_s + warmup_s + parallel.wall_s, 3),
         "speedup": round(speedup, 2),
         "speedup_warm": round(speedup_warm, 2),
         "bitwise_equal": bool(equal and equal_warm),
-        "cell_wall_s_mean": round(float(cell_s.mean()), 4),
-        "cell_wall_s_p95": round(float(np.percentile(cell_s, 95)), 4),
+        "per_cell_warm_s": round(float(cell_s.mean()), 4),
+        "per_cell_warm_s_p95": round(float(np.percentile(cell_s, 95)), 4),
     }
     path = os.path.join(REPO_ROOT, "BENCH_sweep.json")
     with open(path, "w") as f:
@@ -106,10 +163,13 @@ def main(argv=None) -> dict:
 
     print(f"{len(serial.cells)} cells "
           f"({len(spec.scenarios)} scenarios x {len(spec.techniques)} "
-          f"techniques x {len(spec.seeds)} seeds)")
+          f"techniques x {len(spec.seeds)} seeds) on {cpus} cpus")
+    print(f"spawn:         {spawn_s:7.2f}s  (one-time)")
+    print(f"warmup:        {warmup_s:7.2f}s  (one-time, per-worker jit)")
+    print(f"pretrain:      {pretrain_s:7.2f}s  (one-time, parent)")
     print(f"serial:        {serial.wall_s:7.2f}s")
     print(f"parallel:      {parallel.wall_s:7.2f}s  ({parallel.n_workers} "
-          f"workers, speedup {speedup:.2f}x)")
+          f"workers, first grid after bring-up, speedup {speedup:.2f}x)")
     print(f"parallel-warm: {warm.wall_s:7.2f}s  (persistent pool, "
           f"speedup {speedup_warm:.2f}x)")
     print(f"bitwise-equal results: {equal and equal_warm}")

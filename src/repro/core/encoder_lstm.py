@@ -184,11 +184,12 @@ def predict_sequence(params: Params, xs: jax.Array,
 # ------------------------------- training ---------------------------------
 
 
-def mse_loss(params: Params, xs: jax.Array, targets: jax.Array) -> jax.Array:
+def mse_loss(params: Params, xs: jax.Array, targets: jax.Array,
+             use_pallas: bool = False) -> jax.Array:
     """MSE between predicted (alpha, beta) and MLE-fitted targets (paper §4.4:
     'trained using Mean-Square-Error Loss between the values based on the
     predicted distribution and the actual data')."""
-    pred = predict_sequence(params, xs)
+    pred = predict_sequence(params, xs, use_pallas=use_pallas)
     return jnp.mean((pred - targets) ** 2)
 
 
@@ -222,10 +223,12 @@ def adam_update(params: Params, grads: Params, state: AdamState,
     return params, AdamState(step=t, mu=mu, nu=nu)
 
 
-@functools.partial(jax.jit, static_argnames=("lr",))
+@functools.partial(jax.jit, static_argnames=("lr", "use_pallas"))
 def train_step(params: Params, opt: AdamState, xs: jax.Array,
-               targets: jax.Array, lr: float = 1e-5
+               targets: jax.Array, lr: float = 1e-5,
+               use_pallas: bool = False
                ) -> tuple[Params, AdamState, jax.Array]:
-    loss, grads = jax.value_and_grad(mse_loss)(params, xs, targets)
+    loss, grads = jax.value_and_grad(mse_loss)(params, xs, targets,
+                                               use_pallas)
     params, opt = adam_update(params, grads, opt, lr=lr)
     return params, opt, loss

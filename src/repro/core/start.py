@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 from typing import Sequence
 
 import numpy as np
@@ -33,14 +34,28 @@ class JobView:
 
 
 class STARTController:
+    """Algorithm-1 controller.
+
+    ``use_fused_step`` (default on) routes the per-interval prediction
+    through the predictor's fused device program: the M_H history lives in
+    a donated device ring buffer and one jitted call per interval replaces
+    feature re-upload plus ~10 eager dispatches.  Results are bitwise
+    identical to the unfused path (tested; the determinism golden fixture
+    pins it).  Set ``REPRO_DISABLE_FUSED_STEP=1`` to force the historical
+    path for debugging.
+    """
+
     def __init__(self, n_hosts: int, max_tasks: int, k: float = 1.5,
                  horizon: int = 5, seed: int = 0,
-                 ma_decay: float = 0.8, beta_scale: float = 1.0):
+                 ma_decay: float = 0.8, beta_scale: float = 1.0,
+                 use_fused_step: bool = True):
         self.predictor = StragglerPredictor(
             n_hosts=n_hosts, max_tasks=max_tasks, k=k, horizon=horizon,
             seed=seed, beta_scale=beta_scale)
         self.ma = mitigation.StragglerMovingAverage(n_hosts, decay=ma_decay)
         self.horizon = horizon
+        self.use_fused_step = use_fused_step and not os.environ.get(
+            "REPRO_DISABLE_FUSED_STEP")
         self._host_hist: collections.deque = collections.deque(
             maxlen=horizon)
         self._mitigated: set[int] = set()
@@ -49,7 +64,10 @@ class STARTController:
     # ------------------------------ telemetry -----------------------------
 
     def observe_hosts(self, m_h: np.ndarray) -> None:
-        self._host_hist.append(np.asarray(m_h, np.float32))
+        m_h = np.asarray(m_h, np.float32)
+        self._host_hist.append(m_h)
+        if self.use_fused_step:
+            self.predictor.push_host_row(m_h)
 
     def observe_straggler_counts(self, counts: np.ndarray) -> None:
         self.ma.update(counts)
@@ -73,20 +91,67 @@ class STARTController:
     # ------------------------------ decision ------------------------------
 
     def predict_es(self, jobs: Sequence[JobView]) -> np.ndarray:
-        """Batched PredictStraggler (Alg. 1 lines 6-13) over current jobs.
+        """Batched PredictStraggler (Alg. 1 lines 6-13) over current
+        jobs, by JobView (compat surface; delegates to
+        :meth:`predict_es_batch`)."""
+        if not jobs:
+            return np.zeros(0)
+        return self.predict_es_batch(
+            np.array([j.job_id for j in jobs], np.int64),
+            np.stack([j.task_matrix for j in jobs]),
+            np.array([j.q for j in jobs], np.float32))
+
+    def predict_es_batch(self, job_ids: np.ndarray, m_t: np.ndarray,
+                         q: np.ndarray) -> np.ndarray:
+        """Array-native PredictStraggler over the active-job batch (the
+        simulator hot path — no per-job view objects).
 
         Feature assembly is pure numpy; the predictor pads the job batch
         to a power-of-two bucket so the jitted network compiles once per
-        bucket, never once per job count."""
-        if not jobs or not self._host_hist:
-            return np.zeros(len(jobs))
-        m_t = np.stack([j.task_matrix for j in jobs])  # (jobs, q', p)
-        q = np.array([j.q for j in jobs], np.float32)
-        pred = self.predictor.predict_features(self._host_seq(), m_t, q)
-        e_s = np.asarray(pred.e_s)
-        for j, e in zip(jobs, e_s):
-            self._es_cache[j.job_id] = float(e)
+        bucket, never once per job count.  With the fused step enabled
+        the whole pipeline (ring roll, assembly, network, Pareto tail)
+        runs device-resident per interval; a repeat predict within the
+        same interval (no fresh host row) falls back to the
+        bitwise-identical unfused path."""
+        if len(job_ids) == 0 or not self._host_hist:
+            return np.zeros(len(job_ids))
+        q = np.asarray(q, np.float32)
+        if self.use_fused_step and self.predictor.fused_ready:
+            e_s = self.predictor.predict_interval(m_t, q)
+        else:
+            pred = self.predictor.predict_features(self._host_seq(), m_t, q)
+            e_s = np.asarray(pred.e_s)
+        for j, e in zip(job_ids, e_s):
+            self._es_cache[int(j)] = float(e)
         return e_s
+
+    def decide_arrays(self, job_ids: np.ndarray, m_t: np.ndarray,
+                      q: np.ndarray, open_counts: np.ndarray,
+                      deadline: np.ndarray, incomplete_fn,
+                      host_load: np.ndarray | None = None
+                      ) -> list[mitigation.Action]:
+        """Array-native Algorithm-1 main loop (bitwise-equal to
+        :meth:`decide` over equivalent JobViews): the trigger compare runs
+        vectorized over the whole active batch and per-job task lists are
+        materialized — via ``incomplete_fn(job) -> (task_ids, hosts)`` —
+        only for the (rare) jobs that actually reach the
+        q - floor(E_S) completion point."""
+        if len(job_ids) == 0:
+            return []
+        e_s = self.predict_es_batch(job_ids, m_t, q)
+        n_mit = np.floor(e_s)
+        trig = (n_mit >= 1.0) & (open_counts <= n_mit)
+        actions: list[mitigation.Action] = []
+        for idx in np.nonzero(trig)[0]:
+            job = int(job_ids[idx])
+            if job in self._mitigated:
+                continue
+            tids, hosts = incomplete_fn(job)
+            actions.extend(mitigation.plan_mitigation(
+                job, tids, hosts, bool(deadline[idx]), self.ma,
+                load=host_load))
+            self._mitigated.add(job)
+        return actions
 
     def decide(self, jobs: Sequence[JobView],
                host_load: np.ndarray | None = None

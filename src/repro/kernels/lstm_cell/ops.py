@@ -1,14 +1,24 @@
-"""jit'd wrapper for the fused LSTM cell (batch padding + dispatch)."""
+"""jit'd wrapper for the fused LSTM cell (batch padding + dispatch).
+
+``lstm_cell`` is differentiable: ``pallas_call`` defines no AD rule, so
+the public op carries a ``custom_vjp`` whose forward runs the fused
+kernel and whose backward rematerializes the reference cell and applies
+jax's own VJP to it.  Because the kernel's forward is bitwise-equal to
+the reference (tested), the resulting gradients are *bitwise identical*
+to differentiating the reference cell — training routed through the
+Pallas cell reproduces reference training exactly.
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.lstm_cell.lstm_cell import lstm_cell_pallas
 from repro.kernels.lstm_cell.ref import lstm_cell_ref
 
 
-def lstm_cell(x, h, c, wx, wh, b, block_b=128, interpret=True):
-    """Public API; pads batch to the block size and unpads outputs."""
+def _lstm_cell_fwd_impl(x, h, c, wx, wh, b, block_b=128, interpret=True):
+    """Pad batch to the block size, run the fused kernel, unpad."""
     bsz = x.shape[0]
     bb = min(block_b, max(8, 1 << (bsz - 1).bit_length()))
     pad = (-bsz) % bb
@@ -19,6 +29,27 @@ def lstm_cell(x, h, c, wx, wh, b, block_b=128, interpret=True):
     h2, c2 = lstm_cell_pallas(x, h, c, wx, wh, b, block_b=bb,
                               interpret=interpret)
     return h2[:bsz], c2[:bsz]
+
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, wx, wh, b):
+    """Public API; pads batch to the block size and unpads outputs."""
+    return _lstm_cell_fwd_impl(x, h, c, wx, wh, b)
+
+
+def _lstm_cell_fwd(x, h, c, wx, wh, b):
+    return _lstm_cell_fwd_impl(x, h, c, wx, wh, b), (x, h, c, wx, wh, b)
+
+
+def _lstm_cell_bwd(residuals, cotangents):
+    # rematerialize the reference graph and use jax's own VJP of it — the
+    # kernel's forward is bitwise-equal to the reference, so these are
+    # exactly the gradients of the reference cell
+    _, vjp = jax.vjp(lstm_cell_ref, *residuals)
+    return vjp(cotangents)
+
+
+lstm_cell.defvjp(_lstm_cell_fwd, _lstm_cell_bwd)
 
 
 __all__ = ["lstm_cell", "lstm_cell_ref"]

@@ -19,18 +19,27 @@ Design notes:
     ``avg_overhead_s``/``wall_s`` timing fields);
   * techniques that declare pretraining (their registry entry carries a
     ``PretrainSpec`` — no technique is special-cased by name here) are
-    pretrained once per (technique, base-config) per process with fixed
-    seeds (7 train / 9 warmup, matching benchmarks) and cached as pickled
-    bytes; every cell deserializes a fresh instance, so no mutable technique
-    state leaks between cells;
+    pretrained once per (technique, base-config) with fixed seeds (7
+    train / 9 warmup, matching benchmarks) and cached as pickled bytes;
+    every cell deserializes a fresh instance, so no mutable technique
+    state leaks between cells.  A parallel run trains in the PARENT and
+    broadcasts the bytes to workers with their cells — workers never
+    duplicate a warmup/training run;
   * workers are spawned (not forked): JAX runtimes do not survive fork —
     and the pool is *persistent* across ``run()`` calls, so per-worker
     pretrain/warmup caches and XLA jit caches survive between figure
-    sweeps (``shutdown_pool()`` tears it down explicitly).
+    sweeps (``shutdown_pool()`` tears it down explicitly);
+  * scheduling is dynamic and parent-participating: cells are grouped
+    into (technique, scenario) cache-affinity units, the parent runs
+    units itself while workers spawn/import, and steals back unstarted
+    submissions when the queue drains — so a cold pool can never make a
+    sweep slower than running it serially, and a warm W-worker pool
+    gives W+1 effective lanes.
 """
 from __future__ import annotations
 
 import atexit
+import collections
 import concurrent.futures as cf
 import csv
 import dataclasses
@@ -197,7 +206,8 @@ def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
                    pretrain_epochs: int = 8,
                    igru_epochs: int = 40,
                    extra_knobs: dict | None = None,
-                   technique_kwargs: dict | None = None) -> Policy:
+                   technique_kwargs: dict | None = None,
+                   pretrained: bytes | None = None) -> Policy:
     """Fresh technique instance for one cell.
 
     Dispatch is fully generic: the registry entry says whether (and how)
@@ -213,14 +223,41 @@ def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
     config (shared-pretrain sweeps).  ``technique_kwargs`` are
     constructor keywords (SweepSpec's per-technique knobs); pretrained
     policies receive them via ``PretrainContext.kwargs``.
+    ``pretrained`` (pickled policy bytes, as produced by
+    :func:`pretrain_payload` in the sweep parent) seeds this process's
+    cache instead of duplicating the whole warmup + training run —
+    workers receiving a broadcast payload never train.
     """
+    entry, key, pcfg, epochs, tkw = _pretrain_entry(
+        name, cfg, pretrain_cfg=pretrain_cfg,
+        pretrain_epochs=pretrain_epochs, igru_epochs=igru_epochs,
+        extra_knobs=extra_knobs, technique_kwargs=technique_kwargs)
+    if entry.pretrain is None:
+        return entry.factory(**tkw)
+    if key not in _PRETRAINED:
+        if pretrained is not None:
+            _PRETRAINED[key] = pretrained
+        else:
+            ctx = PretrainContext(config=pcfg, epochs=epochs,
+                                  warmup=lambda: _warm_view(pcfg),
+                                  kwargs=dict(tkw))
+            _PRETRAINED[key] = pickle.dumps(entry.pretrain.fn(ctx))
+    return pickle.loads(_PRETRAINED[key])
+
+
+def _pretrain_entry(name: str, cfg: SimConfig, *, pretrain_cfg=None,
+                    pretrain_epochs: int = 8, igru_epochs: int = 40,
+                    extra_knobs: dict | None = None,
+                    technique_kwargs: dict | None = None):
+    """Resolve a technique's registry entry and its pretrain cache key —
+    shared by cell-side construction and the parent's payload broadcast."""
     from repro import policy
     import repro.sim.techniques  # noqa: F401  (registers built-ins)
 
     entry = policy.registry.get(name)   # ValueError for unknown names
     tkw = technique_kwargs or {}
     if entry.pretrain is None:
-        return entry.factory(**tkw)
+        return entry, None, None, None, tkw
     pcfg = pretrain_cfg if pretrain_cfg is not None else cfg
     # key on the epoch knob the technique actually consumes, so an
     # irrelevant knob changing doesn't evict/duplicate a trained entry
@@ -236,21 +273,49 @@ def make_technique(name: str, cfg: SimConfig, *, pretrain_cfg=None,
     epochs = knobs.get(epochs_knob)
     key = (name, _base_key(pcfg), tuple(sorted(tkw.items()))) \
         + ((epochs,) if epochs_knob else ())
+    return entry, key, pcfg, epochs, tkw
+
+
+def pretrain_payload(spec: SweepSpec, scenario: str,
+                     technique: str) -> bytes | None:
+    """Parent-side pretraining for one (scenario, technique): returns the
+    pickled trained policy (``None`` for techniques that don't pretrain).
+
+    A parallel ``run()`` calls this once per distinct pair and ships the
+    bytes to workers with their cells — previously every worker re-ran
+    the identical warmup simulation + training per pair, which made cold
+    pools *slower than serial* on pretrain-heavy grids.  Cached in the
+    parent's ``_PRETRAINED`` (same key the workers use), so repeated
+    sweeps in one process pay nothing.
+    """
+    cfg = spec.cell_config(scenario, int(spec.seeds[0]))
+    pcfg = None
+    if spec.shared_pretrain and spec.overrides:
+        pcfg = spec.pretrain_config(scenario, int(spec.seeds[0]))
+    entry, key, pcfg, epochs, tkw = _pretrain_entry(
+        technique, cfg, pretrain_cfg=pcfg,
+        pretrain_epochs=spec.pretrain_epochs, igru_epochs=spec.igru_epochs,
+        extra_knobs=dict(spec.pretrain_knobs),
+        technique_kwargs=spec.kwargs_for(technique))
+    if entry.pretrain is None:
+        return None
     if key not in _PRETRAINED:
         ctx = PretrainContext(config=pcfg, epochs=epochs,
                               warmup=lambda: _warm_view(pcfg),
                               kwargs=dict(tkw))
         _PRETRAINED[key] = pickle.dumps(entry.pretrain.fn(ctx))
-    return pickle.loads(_PRETRAINED[key])
+    return _PRETRAINED[key]
 
 
 # ------------------------------ cell runner --------------------------------
 
-def run_cell(spec: SweepSpec, scenario: str, technique: str,
-             seed: int) -> CellResult:
+def run_cell(spec: SweepSpec, scenario: str, technique: str, seed: int,
+             pretrained: bytes | None = None) -> CellResult:
     """Run one (scenario, technique, seed) cell. Pure function of the spec
     (up to wall-clock timing fields) — the parallel/serial equivalence
-    guarantee lives here."""
+    guarantee lives here.  ``pretrained`` optionally carries the parent's
+    broadcast policy bytes (identical to what local pretraining would
+    produce, so purity is preserved)."""
     cfg = spec.cell_config(scenario, seed)
     pcfg = None
     if spec.shared_pretrain and spec.overrides:
@@ -259,7 +324,8 @@ def run_cell(spec: SweepSpec, scenario: str, technique: str,
                           pretrain_epochs=spec.pretrain_epochs,
                           igru_epochs=spec.igru_epochs,
                           extra_knobs=dict(spec.pretrain_knobs),
-                          technique_kwargs=spec.kwargs_for(technique))
+                          technique_kwargs=spec.kwargs_for(technique),
+                          pretrained=pretrained)
     t0 = time.perf_counter()
     sim = Simulation(cfg, technique=tech)
     summary = sim.run()
@@ -268,8 +334,70 @@ def run_cell(spec: SweepSpec, scenario: str, technique: str,
                       wall_s=time.perf_counter() - t0)
 
 
-def _run_cell_star(args) -> CellResult:
-    return run_cell(*args)
+def _run_unit(spec: SweepSpec, cells: tuple,
+              payloads: dict) -> list[CellResult]:
+    """Run a scheduling unit (cells sharing (technique, scenario) cache
+    affinity) in order."""
+    return [run_cell(spec, sc, tech, seed,
+                     pretrained=payloads.get((sc, tech)))
+            for sc, tech, seed in cells]
+
+
+def _run_unit_star(args) -> list[CellResult]:
+    return _run_unit(*args)
+
+
+def enable_compile_cache() -> str | None:
+    """Point jax at a shared on-disk compilation cache (idempotent).
+
+    Every sweep worker compiles the same XLA programs (the fused START
+    step per batch bucket, train steps, ...); a shared persistent cache
+    means the first process to compile a program writes it and every
+    other worker — including freshly spawned cold pools — loads the
+    identical executable from disk instead of recompiling.  Executables
+    are bit-identical by construction, so results are unaffected.
+
+    Opt-in: set ``REPRO_JAX_CACHE_DIR=<path>`` (disabled by default —
+    on hosts with slow/contended disks the cache's per-hit bookkeeping
+    can cost more than the recompiles it saves).
+    """
+    path = os.environ.get("REPRO_JAX_CACHE_DIR")
+    if not path or path in ("off", "0"):
+        return None
+    import jax
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    return path
+
+
+def _worker_init(worker_seq=None, pin_cores: bool = False) -> None:
+    """Pool-worker initializer: optionally pin the worker to its own
+    core, enable the shared compilation cache before anything traces,
+    then pay the import cost (jax + simulator stack) up front — spawn
+    overlaps the parent's pretraining and first locally-run units.
+
+    Pinning applies only when workers >= physical cores: each worker's
+    XLA runtime sizes its intra-op pool from the scheduling affinity, so
+    unpinned workers all spawn cpu-count threads and thrash each other.
+    Thread count does not change results (reductions are sharded over
+    rows, and the determinism suite passes across hosts with different
+    core counts); the serial == parallel bitwise assertions still cover
+    every sweep."""
+    if pin_cores and worker_seq is not None \
+            and hasattr(os, "sched_setaffinity"):
+        with worker_seq.get_lock():
+            idx = worker_seq.value
+            worker_seq.value += 1
+        cpus = sorted(os.sched_getaffinity(0))
+        os.sched_setaffinity(0, {cpus[idx % len(cpus)]})
+    enable_compile_cache()
+    import repro.sim.engine  # noqa: F401
+
+
+def _worker_warmup() -> bool:
+    """No-op readiness probe: completes once the worker finished
+    ``_worker_init`` and is pulling from the call queue."""
+    return True
 
 
 # ------------------------------- results -----------------------------------
@@ -280,6 +408,9 @@ class SweepResult:
     cells: list
     wall_s: float
     n_workers: int
+    #: parent-side pretraining time folded into wall_s (0.0 when every
+    #: technique was already cached or nothing pretrains)
+    pretrain_s: float = 0.0
 
     def cell(self, scenario: str, technique: str, seed: int) -> CellResult:
         """O(1) cell lookup (the index is built once, lazily — a Table-4
@@ -361,10 +492,15 @@ class SweepResult:
 _POOL: cf.ProcessPoolExecutor | None = None
 _POOL_WORKERS: int = 0
 _POOL_ATEXIT_REGISTERED = False
+#: warmup futures submitted at spawn — ``f.done()`` per worker is the
+#: scheduler's readiness signal (work submitted before any worker is up
+#: cannot be cancelled back out of the executor's call queue, so the
+#: parent gates submission on this instead of submitting blind)
+_POOL_READY: list = []
 
 
 def _pool(n_workers: int) -> cf.ProcessPoolExecutor:
-    global _POOL, _POOL_WORKERS, _POOL_ATEXIT_REGISTERED
+    global _POOL, _POOL_WORKERS, _POOL_ATEXIT_REGISTERED, _POOL_READY
     if _POOL is not None and _POOL_WORKERS != n_workers:
         _POOL.shutdown(wait=True)
         _POOL = None
@@ -376,10 +512,15 @@ def _pool(n_workers: int) -> cf.ProcessPoolExecutor:
             # spawned workers — tear it down at interpreter exit
             atexit.register(shutdown_pool)
             _POOL_ATEXIT_REGISTERED = True
+        ctx = multiprocessing.get_context("spawn")
+        pin = n_workers >= (os.cpu_count() or 1)
         _POOL = cf.ProcessPoolExecutor(
-            max_workers=n_workers,
-            mp_context=multiprocessing.get_context("spawn"))
+            max_workers=n_workers, mp_context=ctx,
+            initializer=_worker_init,
+            initargs=(ctx.Value("i", 0), pin))
         _POOL_WORKERS = n_workers
+        _POOL_READY = [_POOL.submit(_worker_warmup)
+                       for _ in range(n_workers)]
     return _POOL
 
 
@@ -392,27 +533,193 @@ def shutdown_pool() -> None:
         _POOL = None
 
 
+def warm_pool(n_workers: int) -> float:
+    """Spawn the persistent pool and pay every worker's import cost now;
+    returns the wall seconds it took.  Benchmarks call this so one-time
+    pool bring-up is *measured separately* from grid throughput instead
+    of being silently folded into the first parallel sweep's number."""
+    t0 = time.perf_counter()
+    _pool(n_workers)
+    for f in list(_POOL_READY):
+        f.result()
+    return time.perf_counter() - t0
+
+
+def _build_payloads(spec: SweepSpec) -> dict:
+    """Parent-side pretrain bytes for every (scenario, technique) of the
+    grid that declares pretraining (cached across calls)."""
+    payloads = {}
+    for sc in spec.scenarios:
+        for tech in spec.techniques:
+            b = pretrain_payload(spec, sc, tech)
+            if b is not None:
+                payloads[(sc, tech)] = b
+    return payloads
+
+
+def warm_pool_caches(spec: SweepSpec, n_workers: int) -> float:
+    """Populate every worker's jit/pretrain caches for ``spec`` (each
+    worker runs the first-seed cell of every technique); returns the wall
+    seconds.  Like :func:`warm_pool` this moves one-time bring-up cost
+    out of the first measured grid: with START-style techniques a cold
+    worker otherwise spends seconds XLA-compiling the prediction
+    programs per batch bucket inside the first sweep that uses it."""
+    t0 = time.perf_counter()
+    warm_pool(n_workers)
+    payloads = _build_payloads(spec)
+    # the first-seed slice of the grid covers every (scenario, technique)
+    # shape — remaining seeds reuse the same compiled programs
+    unit = tuple((sc, tech, int(spec.seeds[0]))
+                 for sc in spec.scenarios for tech in spec.techniques)
+    pool = _pool(n_workers)
+    for f in [pool.submit(_run_unit_star, (spec, unit, payloads))
+              for _ in range(n_workers)]:
+        f.result()
+    return time.perf_counter() - t0
+
+
+def _schedule_units(spec: SweepSpec, n_workers: int) -> list[tuple]:
+    """Partition the grid into ordered scheduling units.
+
+    Cells are grouped by (technique, scenario) — the pretrain/jit cache
+    affinity key — so one worker runs a whole group back to back and
+    compiles each technique's programs once, then groups are chunked so
+    there are enough units (~4 per lane, parent included) to load-balance
+    dynamically."""
+    groups: dict = {}
+    for c in spec.cells():
+        groups.setdefault((c[1], c[0]), []).append(c)
+    per_unit = max(1, (len(spec.cells()) + 4 * (n_workers + 1) - 1)
+                   // (4 * (n_workers + 1)))
+    units = []
+    for cells in groups.values():
+        for s in range(0, len(cells), per_unit):
+            units.append(tuple(cells[s:s + per_unit]))
+    return units
+
+
 def run(spec: SweepSpec) -> SweepResult:
     """Execute the sweep grid; parallel over the persistent spawned process
     pool unless ``spec.max_workers <= 1``. Cell order in the result is
-    deterministic (scenario-major, as produced by ``spec.cells()``)."""
+    deterministic (scenario-major, as produced by ``spec.cells()``).
+
+    Parallel scheduling (all bitwise-neutral — every cell is a pure
+    function of the spec, wherever it runs):
+
+      * techniques that pretrain are trained ONCE in the parent and the
+        pickled policy bytes broadcast to workers with their cells (cold
+        pools used to re-train identical controllers in every worker);
+      * cells are grouped by (technique, scenario) so each worker's
+        pretrain/jit caches are hit back to back;
+      * the parent participates: while workers spawn/import (~seconds on
+        a cold pool) it runs units itself, and when the queue drains it
+        steals back not-yet-started submissions — a cold-pool sweep is
+        never slower than running serially.
+    """
+    enable_compile_cache()
     cells = spec.cells()
     n_workers = spec.max_workers
     if n_workers is None:
         n_workers = min(len(cells), os.cpu_count() or 1)
     t0 = time.perf_counter()
+    pretrain_s = 0.0
     if n_workers <= 1 or len(cells) <= 1:
         results = [run_cell(spec, *c) for c in cells]
-        n_workers = 1
-    else:
-        args = [(spec, *c) for c in cells]
+        res = SweepResult(spec=spec, cells=results,
+                          wall_s=time.perf_counter() - t0, n_workers=1)
+        res.write_csv()
+        return res
+
+    pool = _pool(n_workers)             # spawn starts now, in background
+    tp = time.perf_counter()
+    payloads = _build_payloads(spec)
+    pretrain_s = time.perf_counter() - tp
+
+    units = collections.deque(_schedule_units(spec, n_workers))
+    futures: dict = {}
+    done_cells: dict = {}
+
+    def record(results: list[CellResult]) -> None:
+        for r in results:
+            done_cells[(r.scenario, r.technique, r.seed)] = r
+
+    def submit(unit: tuple):
+        nonlocal pool
+        pay = {k: payloads[k] for k in
+               {(sc, tech) for sc, tech, _ in unit} if k in payloads}
         try:
-            results = list(_pool(n_workers).map(_run_cell_star, args))
+            futures[pool.submit(_run_unit_star, (spec, unit, pay))] = unit
         except cf.process.BrokenProcessPool:
-            # a worker died (OOM/kill): respawn the pool once and retry
+            # the pool broke while the parent was busy elsewhere: run
+            # this unit locally, reclaim everything in flight on the
+            # dead pool (its futures will never complete; leaving them
+            # in `futures` would make harvest() tear down the healthy
+            # replacement too), respawn, and resubmit
+            record(_run_unit(spec, unit, payloads))
+            lost = list(futures.values())
+            futures.clear()
             shutdown_pool()
-            results = list(_pool(n_workers).map(_run_cell_star, args))
+            pool = _pool(n_workers)
+            for u in lost:
+                submit(u)
+
+    def harvest(wait: bool) -> None:
+        nonlocal pool
+        pending = list(futures)
+        if wait:
+            cf.wait(pending, return_when=cf.FIRST_COMPLETED)
+        for f in pending:
+            if not f.done():
+                continue
+            unit = futures.pop(f, None)
+            if unit is None:
+                continue
+            try:
+                record(f.result())
+            except cf.process.BrokenProcessPool:
+                # a worker died (OOM/kill): run the lost unit in the
+                # parent, respawn the pool, resubmit what it still held
+                # (futures was rebuilt — stop iterating the stale list)
+                record(_run_unit(spec, unit, payloads))
+                lost = list(futures.values())
+                futures.clear()
+                shutdown_pool()
+                pool = _pool(n_workers)
+                for u in lost:
+                    submit(u)
+                break
+
+    # the parent only runs units itself while workers are still coming up,
+    # or steady-state when the host has spare cores beyond the workers —
+    # on an n_workers >= cpu box a third compute lane just adds contention
+    spare_cores = (os.cpu_count() or 1) > n_workers
+    while units or futures:
+        # readiness-gated submission: work queued before a worker is up
+        # enters the executor's call queue and can never be cancelled
+        # back, so only feed live workers (2x deep to avoid starvation
+        # while the parent is busy with its own unit)
+        ready = sum(f.done() for f in _POOL_READY)
+        while units and ready and len(futures) < 2 * ready:
+            submit(units.popleft())
+        if units and (ready == 0 or spare_cores):
+            record(_run_unit(spec, units.popleft(), payloads))
+            harvest(wait=False)
+        elif units:
+            # workers own the queue; wait for one to free up
+            harvest(wait=True)
+        else:
+            # queue drained: steal back a submission no worker started
+            # yet (still importing on a cold pool) and run it here
+            # rather than waiting on their spawn
+            stolen = next((f for f in futures if f.cancel()), None)
+            if stolen is not None:
+                record(_run_unit(spec, futures.pop(stolen), payloads))
+            elif futures:
+                harvest(wait=True)
+
+    results = [done_cells[c] for c in cells]
     res = SweepResult(spec=spec, cells=results,
-                      wall_s=time.perf_counter() - t0, n_workers=n_workers)
+                      wall_s=time.perf_counter() - t0, n_workers=n_workers,
+                      pretrain_s=pretrain_s)
     res.write_csv()
     return res

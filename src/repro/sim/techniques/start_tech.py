@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import features
-from repro.core.start import JobView, STARTController
+from repro.core.start import STARTController
 from repro.policy import (Action, EVENT_INTERVAL, Policy, PretrainContext,
                           TelemetryView, register)
 from repro.sim.config import SimConfig
@@ -103,9 +103,11 @@ class START(Policy):
                  seed: int = 0, margin: float | None = None,
                  margin_lo: float = -0.50, margin_hi: float = 0.60,
                  rerun_margin_floor: float = 0.10,
-                 k_lo: float = 1.0, k_hi: float = 1.5):
+                 k_lo: float = 1.0, k_hi: float = 1.5,
+                 use_fused_step: bool = True):
         self._controller = controller
         self.controller = controller
+        self.use_fused_step = use_fused_step   # forwards to the controller
         self.seed = seed
         self.margin = margin
         self.margin_lo = margin_lo
@@ -115,6 +117,23 @@ class START(Policy):
         self.k_hi = k_hi
         self._util = 0.0
         self._last_es_sum: float | None = None
+
+    @property
+    def use_fused_step(self) -> bool:
+        """Whether the per-interval pipeline runs as the fused device
+        program.  Forwards to the bound controller so the policy flag
+        can never disagree with actual behavior — setting it at any
+        point (constructor kwarg, sweep ``technique_kwargs``, or plain
+        attribute assignment on a pretrained instance) takes effect."""
+        if self._controller is not None:
+            return self._controller.use_fused_step
+        return self._use_fused_step
+
+    @use_fused_step.setter
+    def use_fused_step(self, value: bool) -> None:
+        self._use_fused_step = bool(value)
+        if self._controller is not None:
+            self._controller.use_fused_step = bool(value)
 
     # ------------------------------ pretraining ----------------------------
 
@@ -133,7 +152,8 @@ class START(Policy):
             cfg = view.config
             self._controller = STARTController(
                 n_hosts=cfg.n_hosts, max_tasks=cfg.max_tasks,
-                k=cfg.k, seed=self.seed)
+                k=cfg.k, seed=self.seed,
+                use_fused_step=self.use_fused_step)
         self.controller = self._controller
         return self._controller
 
@@ -172,25 +192,30 @@ class START(Policy):
         if view.event != EVENT_INTERVAL:
             return []
         ctrl = self._ensure_controller(view)
-        views = []
         active = view.jobs.active()
-        mts = _task_matrices(view, active) if len(active) else None
-        for job, mt in zip(active, mts if mts is not None else ()):
-            job = int(job)
+        if len(active) == 0:
+            self._last_es_sum = 0.0
+            return []
+        # array-native decision path: feature batch + trigger compare run
+        # over the whole active set at once (an active job always has
+        # open_count incomplete original tasks, so open_count IS the
+        # remaining-task count the Algorithm-1 trigger compares against);
+        # per-job task-id lists are built only for triggered jobs
+        mts = _task_matrices(view, active)
+        q = np.asarray(view.jobs.count[active], np.float32)
+
+        def incomplete(job: int):
             inc = view.jobs.incomplete_tasks(job)
-            if inc.size == 0:
-                continue
-            views.append(JobView(
-                job_id=job, q=int(view.jobs.count[job]),
-                deadline_oriented=bool(view.jobs.deadline[job]),
-                incomplete_task_ids=[int(i) for i in inc],
-                task_hosts=[int(view.tasks.host[i]) for i in inc],
-                task_matrix=mt))
+            return ([int(i) for i in inc],
+                    [int(view.tasks.host[i]) for i in inc])
+
         # target scoring: prefer fast + idle hosts among straggler-MA ties
         h = view.hosts
         load = h.util[:, 0] - 0.5 * (h.speed / h.speed.max())
-        acts = ctrl.decide(views, host_load=load)
-        self._last_es_sum = ctrl.es_total(v.job_id for v in views)
+        acts = ctrl.decide_arrays(
+            active, mts, q, view.jobs.open_count[active],
+            view.jobs.deadline[active], incomplete, host_load=load)
+        self._last_es_sum = ctrl.es_total(int(j) for j in active)
         # expected-benefit guard: a re-execution starts from zero progress,
         # so it only helps when  work/eff(target) < remaining/eff(source)
         # with the utilization-scaled, kind-aware margin (class docstring)
