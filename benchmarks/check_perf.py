@@ -10,11 +10,14 @@ baseline (saved aside before the bench overwrote it) and emits
     prediction programs must never recompile in steady state);
   * predict overhead per interval worse by more than the threshold.
 
-Wall-clock comparisons across different hardware are indicative only —
-the committed baseline may come from a different container than the CI
-runner, so pick a threshold wide enough to absorb the hardware delta
-(the CI lane uses 0.5).  The retrace check is machine-independent and
-is the trustworthy cross-host signal.
+Wall-clock comparisons only happen between matching hosts: both files
+carry a coarse hardware fingerprint (``host`` — machine arch + cpu
+count + platform, written by ``engine_bench.py``), and on mismatch the
+regression compare is skipped with an informative note instead of
+emitting spurious warnings against numbers from different hardware.  A
+baseline predating the fingerprint (no ``host`` key) is treated as
+unknown hardware and likewise skipped.  The retrace check is
+machine-independent and always runs.
 
 Always exits 0 — the lane's job is a visible warning on the PR, not a
 red build.
@@ -60,6 +63,14 @@ def main(argv=None) -> int:
              f"sweep worker recompiled a prediction program)")
     else:
         print("retraces_during_warm_cells: 0 ok")
+
+    b_host, f_host = base.get("host"), fresh.get("host")
+    if b_host != f_host or b_host is None:
+        print(f"baseline host fingerprint ({b_host or 'unknown'}) does "
+              f"not match this runner ({f_host or 'unknown'}); wall-clock "
+              f"numbers are not comparable across hardware — skipping "
+              f"the regression compare (retrace check above still ran)")
+        return 0
 
     if (base.get("n_hosts"), base.get("n_intervals")) != \
             (fresh.get("n_hosts"), fresh.get("n_intervals")):

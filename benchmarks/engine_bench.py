@@ -32,6 +32,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 
@@ -60,6 +61,13 @@ BASELINE_MAIN = {"cold_wall_s": 3.978, "warm_wall_s": 0.561}
 BASELINE_PR3 = {"warm_wall_s": 0.149, "predict_ms_per_interval": 1.681,
                 "committed": {"cold_wall_s": 2.061, "warm_wall_s": 0.168,
                               "predict_ms_per_interval": 2.091}}
+
+
+def host_fingerprint() -> str:
+    """Coarse hardware identity for the perf artifact: wall-clock numbers
+    are only comparable between benches run on matching fingerprints
+    (``check_perf.py`` skips the regression compare on mismatch)."""
+    return f"{platform.machine()}-{os.cpu_count()}cpu-{platform.system()}"
 
 
 def _compiles() -> int:
@@ -106,6 +114,7 @@ def bench_cell(n_hosts: int, n_intervals: int, fused: bool = True):
     buckets = sorted(tech._controller.predictor.buckets_used)
     return dict(
         bench="planetlab-x-start",
+        host=host_fingerprint(),
         n_hosts=n_hosts, n_intervals=n_intervals, arrival_rate=0.6,
         fused_step=fused,
         pretrain_s=round(pretrain_s, 3),

@@ -1,0 +1,16 @@
+"""Rootdir pytest bootstrap: make the src-layout package importable.
+
+The repo is src-layout (``src/repro``) without an installed distribution,
+so a bare ``python -m pytest`` from the repo root used to die at
+collection (``ModuleNotFoundError: repro``) unless the caller remembered
+``PYTHONPATH=src``.  Pytest imports the rootdir ``conftest.py`` before
+collecting anything, so inserting ``src`` here makes both invocations
+work identically; the explicit ``PYTHONPATH=src`` tier-1 command keeps
+working unchanged (the path is simply already present).
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

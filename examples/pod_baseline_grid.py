@@ -27,8 +27,8 @@ N_HOSTS = 16
 SLOW = 5            # chronically slow host (e.g. thermal throttling)
 STEPS = 60
 
-GRID = ("start-pod", "igru-sd", "single-fork", "fork-relaunch",
-        "redundancy-fixed", "redundancy-adaptive")
+GRID = ("start-pod", "start-eager", "igru-sd", "single-fork",
+        "fork-relaunch", "redundancy-fixed", "redundancy-adaptive")
 
 
 def make_trace(steps: int, seed: int = 0) -> np.ndarray:

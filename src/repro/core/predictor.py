@@ -57,9 +57,10 @@ _N_SCALARS = 2
 
 
 @functools.partial(jax.jit, donate_argnums=(1,),
-                   static_argnames=("nb", "task_dim", "use_pallas"))
+                   static_argnames=("nb", "task_dim", "use_pallas",
+                                    "per_task"))
 def _fused_step(params, ring, packed, *, nb: int, task_dim: int,
-                use_pallas: bool = False):
+                use_pallas: bool = False, per_task: bool = False):
     """One whole START decision step as a single device program.
 
     Rolls the donated M_H ring buffer by the staged row, assembles the
@@ -75,6 +76,13 @@ def _fused_step(params, ring, packed, *, nb: int, task_dim: int,
     path uses (same jit cache entry, same executable), because fusing
     those elementwise ops into this program changes FMA contraction at
     some shapes and breaks bitwise equality by a few ulps.
+
+    ``per_task=True`` (a *separate* jit cache entry — the default
+    program, and therefore every legacy caller, is byte-identical to
+    before) additionally returns the staged (nb, task_dim) M_T batch as
+    a device-resident alias, so the per-task score tail
+    (:func:`_pareto_tail_per_task`) can run without the task features
+    ever re-crossing the host/device boundary.
     """
     t = ring.shape[0]
     host_dim = ring.shape[1]
@@ -104,6 +112,8 @@ def _fused_step(params, ring, packed, *, nb: int, task_dim: int,
         return net.step(params, state, x, use_pallas=use_pallas)
 
     _, outs = jax.lax.scan(f, state, xs)
+    if per_task:
+        return ring2, outs[-1], q, k, beta_scale, mt
     return ring2, outs[-1], q, k, beta_scale
 
 
@@ -115,8 +125,11 @@ def _ring_roll(ring, row):
 
 
 def fused_compile_count() -> int:
-    """Cumulative XLA compiles of the fused-step programs (process-wide)."""
-    return _fused_step._cache_size() + _ring_roll._cache_size()
+    """Cumulative XLA compiles of the fused-step programs (process-wide),
+    the per-task score tail included — the zero-retrace warm-cell
+    accounting covers the ``per_task`` head too."""
+    return (_fused_step._cache_size() + _ring_roll._cache_size()
+            + _pareto_tail_per_task._cache_size())
 
 
 @jax.jit
@@ -135,6 +148,45 @@ def _pareto_tail(ab: jax.Array, q: jax.Array, k: jax.Array,
     kk = thr / beta
     e_s = q * kk ** (-alpha)
     return alpha, beta, thr, e_s
+
+
+@jax.jit
+def _pareto_tail_per_task(ab: jax.Array, q: jax.Array, k: jax.Array,
+                          beta_scale: jax.Array, mt: jax.Array):
+    """Per-task score tail: (alpha, beta) head + the (nb, task_dim) M_T
+    batch -> one packed (nb, 1 + max_tasks) array ``[E_S | scores]``.
+
+    The per-task straggler score decomposes the job-level expected
+    straggler count across the job's M_T rows by relative resource
+    demand: ``score[j, i] = E_S_j * demand_ji / sum_i demand_ji`` (the
+    four requirement columns; the prev-host column is placement, not
+    demand).  Scores over a job's real tasks sum exactly to E_S_j —
+    with homogeneous demand each task scores the per-task straggler
+    probability ``(K/beta)^(-alpha)`` — and zero-padded slots (demand
+    0) score 0.  Jobs whose every task reports zero demand fall back to
+    a uniform ``E_S / q`` split over their first q slots.
+
+    One jitted program, one packed output: the fused warm path stays a
+    single dispatch plus a single readback with the per-task head
+    enabled.  Kept separate from ``_pareto_tail`` so the legacy
+    E_S-only path keeps its exact cache entry.
+    """
+    alpha = ab[..., 0]
+    beta = ab[..., 1] * beta_scale
+    thr = k * (alpha * beta / (alpha - 1.0))
+    kk = thr / beta
+    e_s = q * kk ** (-alpha)
+    nb = mt.shape[0]
+    max_tasks = mt.shape[1] // features.TASK_FEATURES
+    mt3 = mt.reshape(nb, max_tasks, features.TASK_FEATURES)
+    demand = mt3[..., :4].sum(axis=-1)                  # (nb, max_tasks)
+    total = demand.sum(axis=-1, keepdims=True)
+    real = jnp.arange(max_tasks)[None, :] < q[:, None]  # unpadded slots
+    uniform = real / jnp.maximum(q, 1.0)[:, None]
+    share = jnp.where(total > 0.0, demand / jnp.where(total > 0.0, total,
+                                                      1.0), uniform)
+    scores = e_s[:, None] * share
+    return jnp.concatenate([e_s[:, None], scores], axis=1)
 
 
 @dataclasses.dataclass
@@ -254,13 +306,20 @@ class StragglerPredictor:
         self._ring_rows = self._host_rows - 1
         return rows[-1]
 
-    def predict_interval(self, m_t: np.ndarray, q: np.ndarray) -> np.ndarray:
+    def predict_interval(self, m_t: np.ndarray, q: np.ndarray,
+                         per_task: bool = False):
         """Fused per-interval prediction: one staged upload, one jitted
-        device program, one (n,) E_S download.
+        device program, one download.
 
         Args:
             m_t: (n, max_tasks, TASK_FEATURES) current task matrices.
             q: (n,) true task counts.
+            per_task: also compute the per-task straggler scores
+                (:func:`_pareto_tail_per_task`).  Returns
+                ``(e_s, scores)`` with ``scores`` of shape
+                ``(n, max_tasks)``; the packed device output keeps the
+                warm interval at one staged upload, one dispatch and one
+                readback — the zero-H2D guarantee is unchanged.
         """
         n = m_t.shape[0]
         nb = bucket_size(n)
@@ -283,14 +342,25 @@ class StragglerPredictor:
         mt[n * task_dim:] = 0.0
         ring, self._ring = self._ring, None   # donated: invalid on failure
         try:
-            ring2, ab, qd, kd, bsd = _fused_step(
-                self.params, ring, self._stage(buf), nb=nb,
-                task_dim=task_dim, use_pallas=self.use_pallas_cell)
+            if per_task:
+                ring2, ab, qd, kd, bsd, mtd = _fused_step(
+                    self.params, ring, self._stage(buf), nb=nb,
+                    task_dim=task_dim, use_pallas=self.use_pallas_cell,
+                    per_task=True)
+            else:
+                ring2, ab, qd, kd, bsd = _fused_step(
+                    self.params, ring, self._stage(buf), nb=nb,
+                    task_dim=task_dim, use_pallas=self.use_pallas_cell)
         except Exception:
             self._ring_rows = 0               # next call rebuilds the ring
             raise
         self._ring = ring2
         self._ring_rows += 1
+        if per_task:
+            # the SAME jitted tail (same cache entry) the unfused per-task
+            # path calls — one packed [E_S | scores] readback
+            out = np.asarray(_pareto_tail_per_task(ab, qd, kd, bsd, mtd))
+            return out[:n, 0], out[:n, 1:]
         # the SAME jitted tail (same cache entry) the unfused path calls —
         # all inputs already device-resident, one E_S readback
         _, _, _, e_s = _pareto_tail(ab, qd, kd, bsd)
@@ -299,7 +369,7 @@ class StragglerPredictor:
     # ---------------------------- inference -------------------------------
 
     def predict_features(self, m_h_seq: np.ndarray, m_t: np.ndarray,
-                         q: np.ndarray) -> Prediction:
+                         q: np.ndarray, per_task: bool = False):
         """Predict (alpha, beta, K, E_S) for a batch of jobs from numpy
         feature matrices (the simulator hot path).
 
@@ -309,13 +379,20 @@ class StragglerPredictor:
                 (broadcast across T — the engine publishes one M_T per
                 decision point).
             q: (jobs,) true task counts.
+            per_task: return ``(e_s, scores)`` from the per-task score
+                tail instead of a :class:`Prediction` — the unfused
+                mirror of ``predict_interval(..., per_task=True)``.  Both
+                paths feed bitwise-identical (ab, q, k, beta_scale, M_T)
+                into the same ``_pareto_tail_per_task`` cache entry, so
+                their outputs are bitwise-equal (tested per shape).
 
         The job axis is zero-padded to a power-of-two bucket before the
         jitted network; padded rows are masked off the returned arrays.
         """
         n = m_t.shape[0]
         return self._predict_bucketed(
-            m_h_seq, np.asarray(m_t, np.float32).reshape(1, n, -1), n, q)
+            m_h_seq, np.asarray(m_t, np.float32).reshape(1, n, -1), n, q,
+            per_task=per_task)
 
     def predict(self, m_h_seq: jax.Array, m_t_seq: jax.Array,
                 q: jax.Array) -> Prediction:
@@ -333,7 +410,7 @@ class StragglerPredictor:
             jobs, q)
 
     def _predict_bucketed(self, m_h_seq: np.ndarray, mt_flat: np.ndarray,
-                          n: int, q: np.ndarray) -> Prediction:
+                          n: int, q: np.ndarray, per_task: bool = False):
         """Shared bucketing contract: assemble the (T, bucket, input_dim)
         batch — host features on every row, task features zero-padded
         past ``n``, q padded with 1.0 — run the jitted network, and mask
@@ -349,6 +426,17 @@ class StragglerPredictor:
         xs[:, :n, host_dim:] = mt_flat
         qp = np.ones(nb, np.float32)
         qp[:n] = np.asarray(q, np.float32)
+        if per_task:
+            # the padded task block of the last step IS the fused path's
+            # staged M_T batch (raw features, zero past n), so the shared
+            # tail sees bitwise-identical inputs on both paths
+            ab = net.predict_sequence(self.params, jnp.asarray(xs),
+                                      use_pallas=self.use_pallas_cell)
+            out = np.asarray(_pareto_tail_per_task(
+                ab, jnp.asarray(qp), jnp.float32(self.k),
+                jnp.float32(self.beta_scale),
+                jnp.asarray(xs[-1, :, host_dim:])))
+            return out[:n, 0], out[:n, 1:]
         pred = self._predict_xs(xs, qp)
         return Prediction(*(np.asarray(f)[:n] for f in pred))
 

@@ -48,7 +48,11 @@ class STARTController:
     def __init__(self, n_hosts: int, max_tasks: int, k: float = 1.5,
                  horizon: int = 5, seed: int = 0,
                  ma_decay: float = 0.8, beta_scale: float = 1.0,
-                 use_fused_step: bool = True):
+                 use_fused_step: bool = True, trigger: str = "milestone",
+                 score_on: float = 0.0, hysteresis: int = 2,
+                 cooldown: int = 5):
+        if trigger not in ("milestone", "per_task"):
+            raise ValueError(f"unknown trigger mode {trigger!r}")
         self.predictor = StragglerPredictor(
             n_hosts=n_hosts, max_tasks=max_tasks, k=k, horizon=horizon,
             seed=seed, beta_scale=beta_scale)
@@ -56,10 +60,25 @@ class STARTController:
         self.horizon = horizon
         self.use_fused_step = use_fused_step and not os.environ.get(
             "REPRO_DISABLE_FUSED_STEP")
+        #: "milestone" — Algorithm 1 verbatim: act once a job is down to
+        #: floor(E_S) open tasks.  "per_task" — act as soon as the
+        #: predicted straggler set is nonempty: each interval the
+        #: top-floor(E_S) incomplete tasks by per-task score (>=
+        #: ``score_on``) form the set; a task fires after ``hysteresis``
+        #: consecutive intervals in the set and then rests ``cooldown``
+        #: intervals, so scores flapping across intervals cannot spam
+        #: speculate/rerun actions.
+        self.trigger = trigger
+        self.score_on = score_on
+        self.hysteresis = hysteresis
+        self.cooldown = cooldown
         self._host_hist: collections.deque = collections.deque(
             maxlen=horizon)
         self._mitigated: set[int] = set()
         self._es_cache: dict[int, float] = {}
+        self._tick = 0                       # decide_arrays intervals seen
+        self._streak: dict[int, int] = {}    # task -> consecutive in-set
+        self._cool: dict[int, int] = {}      # task -> tick cooldown expires
 
     # ------------------------------ telemetry -----------------------------
 
@@ -101,6 +120,19 @@ class STARTController:
             np.stack([j.task_matrix for j in jobs]),
             np.array([j.q for j in jobs], np.float32))
 
+    @staticmethod
+    def _sanitize_es(e_s: np.ndarray, q: np.ndarray) -> np.ndarray:
+        """Guard the trigger against a degenerate network output: a
+        non-finite E_S (alpha <= 1 makes the Pareto mean blow up) would
+        flow into ``np.floor`` and either permanently force-fire (inf)
+        or silently disable (NaN compares false) the trigger for that
+        job.  Non-finite maps to 0 (no predicted stragglers — mitigating
+        on garbage is worse than waiting) and finite values clamp to the
+        only meaningful range, [0, q]."""
+        e_s = np.asarray(e_s)
+        e_s = np.where(np.isfinite(e_s), e_s, 0.0)
+        return np.clip(e_s, 0.0, np.asarray(q, e_s.dtype))
+
     def predict_es_batch(self, job_ids: np.ndarray, m_t: np.ndarray,
                          q: np.ndarray) -> np.ndarray:
         """Array-native PredictStraggler over the active-job batch (the
@@ -121,9 +153,34 @@ class STARTController:
         else:
             pred = self.predictor.predict_features(self._host_seq(), m_t, q)
             e_s = np.asarray(pred.e_s)
+        e_s = self._sanitize_es(e_s, q)
         for j, e in zip(job_ids, e_s):
             self._es_cache[int(j)] = float(e)
         return e_s
+
+    def predict_scores_batch(self, job_ids: np.ndarray, m_t: np.ndarray,
+                             q: np.ndarray
+                             ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-task PredictStraggler: ``(e_s, scores)`` with ``scores``
+        of shape (jobs, max_tasks) — E_S decomposed across each job's
+        M_T rows by relative resource demand (scores over a job's real
+        tasks sum to its E_S).  Same fused-step routing and E_S
+        sanitization as :meth:`predict_es_batch`."""
+        if len(job_ids) == 0 or not self._host_hist:
+            return (np.zeros(len(job_ids)),
+                    np.zeros((len(job_ids), self.predictor.max_tasks)))
+        q = np.asarray(q, np.float32)
+        if self.use_fused_step and self.predictor.fused_ready:
+            e_s, scores = self.predictor.predict_interval(
+                m_t, q, per_task=True)
+        else:
+            e_s, scores = self.predictor.predict_features(
+                self._host_seq(), m_t, q, per_task=True)
+        e_s = self._sanitize_es(e_s, q)
+        scores = np.where(np.isfinite(scores), scores, 0.0)
+        for j, e in zip(job_ids, e_s):
+            self._es_cache[int(j)] = float(e)
+        return e_s, scores
 
     def decide_arrays(self, job_ids: np.ndarray, m_t: np.ndarray,
                       q: np.ndarray, open_counts: np.ndarray,
@@ -135,9 +192,20 @@ class STARTController:
         vectorized over the whole active batch and per-job task lists are
         materialized — via ``incomplete_fn(job) -> (task_ids, hosts)`` —
         only for the (rare) jobs that actually reach the
-        q - floor(E_S) completion point."""
+        q - floor(E_S) completion point.
+
+        With ``trigger="per_task"`` the milestone wait is dropped:
+        mitigation starts as soon as a job's predicted straggler set is
+        nonempty (:meth:`_decide_per_task`).  In that mode
+        ``incomplete_fn`` must return a third element — each task's slot
+        index into the job's M_T rows — so per-task scores can be
+        aligned with open tasks; a trailing element from milestone-mode
+        callers is ignored."""
         if len(job_ids) == 0:
             return []
+        if self.trigger == "per_task":
+            return self._decide_per_task(job_ids, m_t, q, deadline,
+                                         incomplete_fn, host_load)
         e_s = self.predict_es_batch(job_ids, m_t, q)
         n_mit = np.floor(e_s)
         trig = (n_mit >= 1.0) & (open_counts <= n_mit)
@@ -146,18 +214,102 @@ class STARTController:
             job = int(job_ids[idx])
             if job in self._mitigated:
                 continue
-            tids, hosts = incomplete_fn(job)
+            tids, hosts = incomplete_fn(job)[:2]
             actions.extend(mitigation.plan_mitigation(
                 job, tids, hosts, bool(deadline[idx]), self.ma,
                 load=host_load))
             self._mitigated.add(job)
         return actions
 
+    def _decide_per_task(self, job_ids: np.ndarray, m_t: np.ndarray,
+                         q: np.ndarray, deadline: np.ndarray,
+                         incomplete_fn,
+                         host_load: np.ndarray | None = None
+                         ) -> list[mitigation.Action]:
+        """Per-task trigger: mitigate predicted stragglers the moment the
+        prediction says there are some, instead of waiting for the
+        q - floor(E_S) completion milestone.
+
+        Each interval, a job with floor(E_S) >= 1 contributes its
+        top-floor(E_S) *incomplete* tasks by per-task score (subject to
+        the absolute ``score_on`` floor) to the predicted straggler set.
+        A task must stay in the set ``hysteresis`` consecutive intervals
+        before it fires (one flapping interval resets its streak), and a
+        fired task cannot fire again for ``cooldown`` intervals — the
+        engine dedups concurrent copies, but the cooldown keeps the
+        controller from even proposing spam.
+
+        When ``host_load`` is given, a set member only fires while its
+        current host carries at-or-above-median load: a predicted
+        straggler on an uncontended host mostly resolves itself, and in
+        saturated regimes every premature copy/rerun competes with real
+        work — acting early pays precisely where the prediction points
+        at a contended host (its streak keeps building meanwhile, so the
+        fire is deferred, not forgotten)."""
+        e_s, scores = self.predict_scores_batch(job_ids, m_t, q)
+        self._tick += 1
+        actions: list[mitigation.Action] = []
+        in_set: set[int] = set()
+        load_med = (np.median(host_load) if host_load is not None
+                    else None)
+        for idx in range(len(job_ids)):
+            n_pred = int(np.floor(e_s[idx]))
+            if n_pred < 1:
+                continue
+            job = int(job_ids[idx])
+            tids, hosts, slots = incomplete_fn(job)
+            if len(tids) == 0:
+                continue
+            tids = np.asarray(tids, np.int64)
+            s = scores[idx][np.asarray(slots, np.int64)]
+            order = np.argsort(-s, kind="stable")[:n_pred]
+            fire_t: list[int] = []
+            fire_h: list[int] = []
+            for i in order:
+                if s[i] < self.score_on:
+                    continue
+                tid = int(tids[i])
+                in_set.add(tid)
+                streak = self._streak.get(tid, 0) + 1
+                self._streak[tid] = streak
+                if streak < self.hysteresis \
+                        or self._cool.get(tid, 0) > self._tick:
+                    continue
+                src = int(hosts[i])
+                if load_med is not None and src >= 0 \
+                        and host_load[src] < load_med:
+                    continue
+                fire_t.append(tid)
+                fire_h.append(src)
+                self._cool[tid] = self._tick + self.cooldown
+                self._streak[tid] = 0
+            if fire_t:
+                actions.extend(mitigation.plan_mitigation(
+                    job, fire_t, fire_h, bool(deadline[idx]), self.ma,
+                    load=host_load))
+        # a task that dropped out of the predicted set loses its streak
+        for tid in [t for t in self._streak if t not in in_set]:
+            del self._streak[tid]
+        return actions
+
+    def forget_tasks(self, task_ids) -> None:
+        """Drop per-task trigger state (streaks, cooldowns) for recycled
+        task ids — substrates that reuse ids across work units (the pod
+        runtime's per-window synthetic tasks) call this at the boundary."""
+        for t in task_ids:
+            t = int(t)
+            self._streak.pop(t, None)
+            self._cool.pop(t, None)
+
     def decide(self, jobs: Sequence[JobView],
                host_load: np.ndarray | None = None
                ) -> list[mitigation.Action]:
         """Algorithm 1 main loop: emit mitigation actions for jobs that have
-        reached the q - floor(E_S) completion point."""
+        reached the q - floor(E_S) completion point.
+
+        The JobView path is milestone-only (a JobView carries no slot
+        mapping into its task matrix); per-task triggering lives in
+        :meth:`decide_arrays`."""
         if not jobs:
             return []
         e_s = self.predict_es(jobs)

@@ -138,6 +138,84 @@ class StartPodPolicy(Policy):
         return actions
 
 
+@register("start-eager-pod", substrates=("pod",),
+          description="START's per-task predicted-straggler trigger on "
+                      "pod semantics: hosts in the predicted set get "
+                      "backup shards after a hysteresis streak, chronic "
+                      "stragglers are evicted")
+class StartEagerPodPolicy(StartPodPolicy):
+    """The per-task eager trigger translated to pod semantics.
+
+    :class:`StartPodPolicy` only launches backups once the fitted tail's
+    floor(E_S) reaches 1 — the pod analogue of the simulator's late
+    completion-milestone trigger.  Here a host enters the predicted
+    straggler set when it either ranks among the top-floor(E_S) slowest
+    of the last step or exceeds the per-interval straggler threshold
+    (relative step time > k, the same signal the runtime's chronic
+    counter uses); it gets a backup shard after ``hysteresis``
+    consecutive in-set steps and then rests ``cooldown`` steps, so a
+    host flapping around the threshold cannot spam backups.  Chronic
+    stragglers are evicted exactly as in the base policy.  Per-host
+    streak state is dropped on ``forget_tasks`` (the runtime rebinds the
+    per-host task ids at every horizon-window boundary).
+    """
+
+    name = "start-eager-pod"
+
+    def __init__(self, hysteresis: int = 2, cooldown: int = 5):
+        self.hysteresis = hysteresis
+        self.cooldown = cooldown
+        self._tick = 0
+        self._streak: dict[int, int] = {}
+        self._cool: dict[int, int] = {}
+
+    def forget_tasks(self, task_ids) -> None:
+        for t in task_ids:
+            t = int(t)
+            self._streak.pop(t, None)
+            self._cool.pop(t, None)
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        cfg = view.config
+        step_times = view.extra.get("step_times", ())
+        if not step_times:
+            return []
+        self._tick += 1
+        online = view.hosts.online()
+        chronic = view.extra["chronic"]
+        actions: list[Action] = []
+        unavailable: set[int] = set()
+        for h in np.nonzero(chronic >= cfg.evict_after)[0]:
+            h = int(h)
+            if online[h]:
+                actions.append(host_action(ActionKind.EVICT, h))
+                unavailable.add(h)
+        last = np.asarray(step_times[-1], float)
+        med = np.median(last[last > 0]) if (last > 0).any() else 1.0
+        rel = last / max(med, 1e-9)
+        e_s = expected_stragglers(step_times, cfg.n_hosts, cfg.k,
+                                  cfg.horizon)
+        n_pred = int(math.floor(e_s)) if math.isfinite(e_s) else 0
+        n_pred = min(max(n_pred, 0), cfg.n_hosts)
+        members = {int(h) for h in np.argsort(-rel)[:n_pred]}
+        members |= {int(h) for h in np.nonzero(rel > cfg.k)[0]}
+        for h in sorted(members, key=lambda i: (-rel[i], i)):
+            if not online[h] or h in unavailable:
+                continue
+            streak = self._streak.get(h, 0) + 1
+            self._streak[h] = streak
+            if streak < self.hysteresis \
+                    or self._cool.get(h, 0) > self._tick:
+                continue
+            # backup host left to the runtime's lowest-MA pick
+            actions.append(host_action(ActionKind.BACKUP_SHARD, h))
+            self._cool[h] = self._tick + self.cooldown
+            self._streak[h] = 0
+        for h in [h for h in self._streak if h not in members]:
+            del self._streak[h]
+        return actions
+
+
 class StragglerRuntime:
     """Per-step telemetry in, mitigation actions out.
 

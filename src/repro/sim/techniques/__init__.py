@@ -17,7 +17,7 @@ from repro.sim.techniques.replication import (AdaptiveRedundancy,
                                               FixedRedundancy,
                                               ForkRelaunch, SingleFork)
 from repro.sim.techniques.rpps import RPPS
-from repro.sim.techniques.start_tech import START
+from repro.sim.techniques.start_tech import START, STARTEager
 
 policy.register("none", description="no straggler mitigation "
                                     "(control)")(NoMitigation)
@@ -36,8 +36,8 @@ REPLICATION = ["single-fork", "fork-relaunch", "redundancy-fixed",
 #: single source for the golden fixture grid (benchmarks/regen_golden),
 #: the nightly Table-4 grid and the slow invariant grid, so the three
 #: can't silently drift when a technique is added
-FIELD = ("none", "start", "igru-sd", "sgc", "dolly", "grass",
-         "nearestfit", "wrangler", "rpps", *REPLICATION)
+FIELD = ("none", "start", "start-eager", "igru-sd", "sgc", "dolly",
+         "grass", "nearestfit", "wrangler", "rpps", *REPLICATION)
 
 
 def make(name: str, **kw):
@@ -47,6 +47,6 @@ def make(name: str, **kw):
 
 
 __all__ = ["REGISTRY", "BASELINES", "REPLICATION", "FIELD", "make", "START",
-           "IGRUSD", "SGC", "Dolly", "GRASS", "NearestFit", "Wrangler",
-           "RPPS", "NoMitigation", "SingleFork", "ForkRelaunch",
+           "STARTEager", "IGRUSD", "SGC", "Dolly", "GRASS", "NearestFit",
+           "Wrangler", "RPPS", "NoMitigation", "SingleFork", "ForkRelaunch",
            "FixedRedundancy", "AdaptiveRedundancy"]

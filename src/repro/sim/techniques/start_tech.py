@@ -205,9 +205,14 @@ class START(Policy):
         q = np.asarray(view.jobs.count[active], np.float32)
 
         def incomplete(job: int):
+            # (tids, hosts, slots) — the third element maps each open
+            # task to its M_T row (tid - CSR start) for the per-task
+            # trigger; the milestone trigger ignores it
             inc = view.jobs.incomplete_tasks(job)
+            start = int(view.jobs.start[job])
             return ([int(i) for i in inc],
-                    [int(view.tasks.host[i]) for i in inc])
+                    [int(view.tasks.host[i]) for i in inc],
+                    [int(i) - start for i in inc])
 
         # target scoring: prefer fast + idle hosts among straggler-MA ties
         h = view.hosts
@@ -242,6 +247,87 @@ class START(Policy):
 
     def predicted_straggler_count(self) -> float | None:
         return self._last_es_sum
+
+
+@register("start-eager", epochs_knob="pretrain_epochs",
+          substrates=("sim", "pod"),
+          description="START with the per-task predicted-straggler "
+                      "trigger: mitigation starts as soon as the "
+                      "predicted set is nonempty (hysteresis + per-task "
+                      "cooldown) instead of at the q - floor(E_S) "
+                      "completion milestone")
+class STARTEager(START):
+    """START with ``trigger="per_task"`` (the late-trigger-gap fix).
+
+    Legacy START waits for a job to be down to its floor(E_S) open
+    tasks — in saturated regimes (``overload``) that completion
+    milestone arrives rarely and late, so START roughly ties ``none``.
+    This variant mitigates the *predicted* stragglers directly: each
+    interval the per-task score head ranks a job's open tasks, the
+    top-floor(E_S) form the predicted set, and a task that stays in the
+    set ``hysteresis`` consecutive intervals is speculated/rerun (then
+    rests ``cooldown`` intervals).  Everything else — predictor,
+    pretraining, the utilization-adaptive expected-benefit guard — is
+    inherited from :class:`START`.
+
+    On the pod substrate the same eager semantics run through
+    :class:`repro.distributed.straggler_runtime.StartEagerPodPolicy`
+    (per-host predicted-straggler streaks -> backup shards, chronic
+    stragglers -> evict).
+    """
+
+    name = "start-eager"
+
+    def __init__(self, controller: STARTController | None = None,
+                 seed: int = 0, score_on: float = 0.10,
+                 hysteresis: int = 5, cooldown: int = 30, **kw):
+        super().__init__(controller=controller, seed=seed, **kw)
+        self.score_on = score_on
+        self.hysteresis = hysteresis
+        self.cooldown = cooldown
+        self._pod = None
+        if self._controller is not None:
+            self._configure_trigger(self._controller)
+
+    def _configure_trigger(self, ctrl: STARTController) -> None:
+        ctrl.trigger = "per_task"
+        ctrl.score_on = self.score_on
+        ctrl.hysteresis = self.hysteresis
+        ctrl.cooldown = self.cooldown
+
+    def _ensure_controller(self, view: TelemetryView) -> STARTController:
+        ctrl = super()._ensure_controller(view)
+        self._configure_trigger(ctrl)
+        return ctrl
+
+    # --------------------------- pod substrate -----------------------------
+
+    def _pod_policy(self):
+        if self._pod is None:
+            from repro.distributed.straggler_runtime import \
+                StartEagerPodPolicy
+            self._pod = StartEagerPodPolicy(hysteresis=self.hysteresis,
+                                            cooldown=self.cooldown)
+        return self._pod
+
+    def observe(self, view: TelemetryView) -> None:
+        from repro.sim.techniques.replication import _on_pod
+        if _on_pod(view):
+            self._pod_policy().observe(view)
+            return
+        super().observe(view)
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        from repro.sim.techniques.replication import _on_pod
+        if _on_pod(view):
+            return self._pod_policy().decide(view)
+        return super().decide(view)
+
+    def forget_tasks(self, task_ids) -> None:
+        if self._pod is not None:
+            self._pod.forget_tasks(task_ids)
+        if self._controller is not None:
+            self._controller.forget_tasks(task_ids)
 
 
 def collect_training_data(cfg: SimConfig, horizon: int = 5
