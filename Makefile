@@ -3,7 +3,7 @@
 PY := python
 
 .PHONY: test test-all lint sweep-bench engine-bench bench regen-golden \
-	nightly-grid
+	nightly-grid serve serve-bench
 
 test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -19,6 +19,12 @@ sweep-bench:  ## serial vs cold/warm-pool sweep benchmark -> BENCH_sweep.json
 
 engine-bench:  ## single-cell (planetlab x start) benchmark -> BENCH_engine.json
 	PYTHONPATH=src $(PY) benchmarks/engine_bench.py
+
+serve:  ## prediction-service demo: daemon + TCP tenants + retrain cycle
+	PYTHONPATH=src $(PY) examples/predict_service.py
+
+serve-bench:  ## concurrent multi-tenant serving benchmark -> BENCH_serve.json
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py
 
 bench:  ## paper figure reproductions (scaled-down)
 	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -19,11 +19,19 @@ baseline predating the fingerprint (no ``host`` key) is treated as
 unknown hardware and likewise skipped.  The retrace check is
 machine-independent and always runs.
 
+When ``--serve-baseline`` / ``--serve-fresh`` are given, the same
+treatment covers the serving daemon's ``BENCH_serve.json``: any
+``warm_retraces`` is a hard (machine-independent) warning, and the p99
+answer-latency SLO plus p50/throughput are compared between matching
+hosts at matching sizing.
+
 Always exits 0 — the lane's job is a visible warning on the PR, not a
 red build.
 
     python benchmarks/check_perf.py --baseline /tmp/BENCH_engine.base.json \
-        --fresh BENCH_engine.json [--threshold 0.2]
+        --fresh BENCH_engine.json [--threshold 0.2] \
+        [--serve-baseline /tmp/BENCH_serve.base.json \
+         --serve-fresh BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -39,6 +47,76 @@ def warn(msg: str) -> None:
     print(msg, file=sys.stderr)
 
 
+def _load_pair(baseline: str, fresh: str):
+    if not os.path.exists(baseline):
+        print(f"no baseline at {baseline}; nothing to compare")
+        return None, None
+    with open(baseline) as f:
+        base = json.load(f)
+    with open(fresh) as f:
+        fresh_d = json.load(f)
+    return base, fresh_d
+
+
+def _hosts_match(base: dict, fresh: dict, what: str) -> bool:
+    b_host, f_host = base.get("host"), fresh.get("host")
+    if b_host != f_host or b_host is None:
+        print(f"{what}: baseline host fingerprint "
+              f"({b_host or 'unknown'}) does not match this runner "
+              f"({f_host or 'unknown'}); wall-clock numbers are not "
+              f"comparable across hardware — skipping the regression "
+              f"compare (machine-independent checks above still ran)")
+        return False
+    return True
+
+
+def check_serve(baseline: str, fresh_path: str,
+                threshold: float) -> None:
+    """Serving-daemon trajectory: retraces are a hard warning, p99 SLO
+    (plus p50 and throughput) compare only between matching hosts at
+    matching tenants x rounds sizing."""
+    base, fresh = _load_pair(baseline, fresh_path)
+    if base is None:
+        return
+
+    rt = fresh.get("warm_retraces")
+    if rt:
+        warn(f"serve warm_retraces = {rt} (must be 0: a warm serving "
+             f"daemon recompiled a prediction program mid-load)")
+    else:
+        print("serve warm_retraces: 0 ok")
+
+    if not _hosts_match(base, fresh, "serve"):
+        return
+    sizing = ("tenants", "rounds", "n_hosts", "max_tasks",
+              "batch_window_ms")
+    if any(base.get(k) != fresh.get(k) for k in sizing):
+        print("serve baseline and fresh bench use different sizings; "
+              "skipping the latency comparison")
+        return
+
+    for key in ("p50_ms", "p99_ms"):
+        b, f_ = base.get(key), fresh.get(key)
+        if not b or not f_:
+            continue
+        ratio = f_ / b
+        if ratio > 1.0 + threshold:
+            warn(f"serve {key} regressed {ratio:.2f}x vs committed "
+                 f"baseline ({b} -> {f_} ms): answer-latency SLO "
+                 f"trajectory is slipping")
+        else:
+            print(f"serve {key}: {b} -> {f_} ms ({ratio:.2f}x) ok")
+    b, f_ = base.get("answers_per_s"), fresh.get("answers_per_s")
+    if b and f_:
+        ratio = b / f_   # higher is better
+        if ratio > 1.0 + threshold:
+            warn(f"serve answers_per_s regressed {ratio:.2f}x vs "
+                 f"committed baseline ({b} -> {f_})")
+        else:
+            print(f"serve answers_per_s: {b} -> {f_} "
+                  f"({ratio:.2f}x) ok")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -46,15 +124,18 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", default="BENCH_engine.json")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="fractional wall-clock regression that warns")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="committed BENCH_serve.json (pre-bench copy)")
+    ap.add_argument("--serve-fresh", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
-    if not os.path.exists(args.baseline):
-        print(f"no baseline at {args.baseline}; nothing to compare")
+    if args.serve_baseline:
+        check_serve(args.serve_baseline, args.serve_fresh,
+                    args.threshold)
+
+    base, fresh = _load_pair(args.baseline, args.fresh)
+    if base is None:
         return 0
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
 
     # machine-independent check first — it must run regardless of sizing
     rt = fresh.get("retraces_during_warm_cells")
@@ -64,12 +145,7 @@ def main(argv=None) -> int:
     else:
         print("retraces_during_warm_cells: 0 ok")
 
-    b_host, f_host = base.get("host"), fresh.get("host")
-    if b_host != f_host or b_host is None:
-        print(f"baseline host fingerprint ({b_host or 'unknown'}) does "
-              f"not match this runner ({f_host or 'unknown'}); wall-clock "
-              f"numbers are not comparable across hardware — skipping "
-              f"the regression compare (retrace check above still ran)")
+    if not _hosts_match(base, fresh, "engine"):
         return 0
 
     if (base.get("n_hosts"), base.get("n_intervals")) != \

@@ -1,0 +1,214 @@
+"""Prediction-service benchmark: concurrent multi-tenant TCP serving.
+
+Measures what a tenant pays per answered snapshot when ``repro.service``
+is under concurrent load — the serving twin of ``engine_bench.py`` — and
+writes a perf-trajectory artifact to the repo root (``BENCH_serve.json``):
+
+  * ``p50_ms`` / ``p99_ms`` — per-answer round-trip latency (client
+    ``snapshot()`` call to decoded response, JSON-lines over loopback
+    TCP) across all tenants in steady state;
+  * ``answers_per_s`` — aggregate steady-state throughput;
+  * ``mean_batch_rows`` — how many tenant jobs each device dispatch
+    actually coalesced (``batch_rows / ticks`` over the measured phase;
+    the whole point of the shared batcher is that this is > 1 under
+    concurrent load);
+  * ``warm_retraces`` — compile-counter delta across the measured phase.
+    Every power-of-two bucket is pre-warmed in-process before the TCP
+    phase starts, so this **must be 0**: a warm serving daemon never
+    recompiles a prediction program no matter how tenants interleave;
+  * sizing (``tenants``, ``rounds``, ``n_hosts``, ``max_tasks``,
+    ``batch_window_ms``) and the host fingerprint gating wall-clock
+    comparisons in ``check_perf.py``.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import threading
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import write_csv  # noqa: E402
+
+from repro.core import encoder_lstm as net  # noqa: E402
+from repro.core import features  # noqa: E402
+from repro.core.predictor import fused_compile_count  # noqa: E402
+from repro.policy import wire  # noqa: E402
+from repro.service import (Profile, ServiceConfig,  # noqa: E402
+                           ServiceDaemon)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def host_fingerprint() -> str:
+    return f"{platform.machine()}-{os.cpu_count()}cpu-{platform.system()}"
+
+
+def _compiles() -> int:
+    return net.predict_sequence._cache_size() + fused_compile_count()
+
+
+def _payloads(tenant: str, n: int, n_hosts: int, max_tasks: int,
+              seed: int) -> list[dict]:
+    """Pre-build every snapshot a tenant will send so the measured loop
+    pays only transport + service time, not feature synthesis."""
+    rng = np.random.default_rng(seed)
+    q = max_tasks
+    out = []
+    for seq in range(n):
+        m_h = rng.random((n_hosts, features.HOST_FEATURES),
+                         dtype=np.float32)
+        m_t = rng.random((max_tasks, features.TASK_FEATURES),
+                         dtype=np.float32)
+        tasks = [(100 + i, i % n_hosts, i) for i in range(q)]
+        out.append(wire.snapshot_to_wire(
+            tenant, seq, m_h,
+            jobs=[wire.job_to_wire(seq, q, m_t, tasks=tasks)]))
+    return out
+
+
+def _prewarm(daemon: ServiceDaemon, prof: Profile, tenants: list[str],
+             n_hosts: int, max_tasks: int) -> tuple[float, int]:
+    """Warm every bucket pattern in-process BEFORE the daemon's worker
+    starts: k concurrent tenants for k = 1..n covers each power-of-two
+    batch bucket plus the fused single-tenant path, deterministically
+    (no batch-window races).  The trailing solo / full-group / solo
+    rounds hit the fused path with a short idle backlog, compiling the
+    ``_ring_roll`` catch-up program — the one pattern the k-ramp alone
+    misses.  Returns (elapsed_s, warm_rounds)."""
+    svc = daemon.service
+    t0 = time.perf_counter()
+    for t in tenants:
+        r = svc.hello(t, prof.to_wire())
+        assert r["ok"], r
+    groups = [tenants[:k] for k in range(1, len(tenants) + 1)]
+    groups += [[tenants[0]], list(tenants), [tenants[0]]]
+    warm = {t: _payloads(t, len(groups), n_hosts, max_tasks, seed=999)
+            for t in tenants}
+    for seq, group in enumerate(groups):
+        ps = []
+        for t in group:
+            snap = dict(warm[t][seq])
+            snap["seq"] = seq
+            ps.append(svc.submit(t, snap))
+        while svc.tick():
+            pass
+        for p in ps:
+            assert p.result and p.result["ok"], p.result
+    return time.perf_counter() - t0, len(groups)
+
+
+def bench_serve(tenants: int, rounds: int, n_hosts: int,
+                max_tasks: int, batch_window: float = 0.002) -> dict:
+    # the daemon is started only after _prewarm: its batch worker would
+    # otherwise race the deterministic per-pattern warm ticks
+
+    prof = Profile(n_hosts=n_hosts, max_tasks=max_tasks, horizon=5)
+    cfg = ServiceConfig(profile=prof, max_tenants=tenants,
+                        queue_depth=8, sanitize="clamp")
+    names = [f"bench{i}" for i in range(tenants)]
+    daemon = ServiceDaemon(cfg, port=0, batch_window=batch_window)
+    warm_s, warm_rounds = _prewarm(daemon, prof, names, n_hosts,
+                                   max_tasks)
+    daemon.start()
+    try:
+        payloads = {t: _payloads(t, rounds, n_hosts, max_tasks, seed=i)
+                    for i, t in enumerate(names)}
+        # tenant seqs continued past the warm phase's
+        for t in names:
+            for s, snap in enumerate(payloads[t]):
+                snap["seq"] = warm_rounds + s
+        before_stats = daemon.service.stats()
+        before_compiles = _compiles()
+        lats: dict[str, list[float]] = {t: [] for t in names}
+        errors: list[dict] = []
+        barrier = threading.Barrier(tenants + 1)
+
+        def run(tenant: str) -> None:
+            client = daemon.tcp_client(tenant)
+            try:
+                barrier.wait()
+                for snap in payloads[tenant]:
+                    t0 = time.perf_counter()
+                    resp = client.request(snap)
+                    lats[tenant].append(time.perf_counter() - t0)
+                    if not resp.get("ok"):
+                        errors.append(resp)
+            finally:
+                client.close()
+
+        threads = [threading.Thread(target=run, args=(t,), daemon=True)
+                   for t in names]
+        for th in threads:
+            th.start()
+        barrier.wait()
+        t0 = time.perf_counter()
+        for th in threads:
+            th.join()
+        wall_s = time.perf_counter() - t0
+        after_stats = daemon.service.stats()
+        warm_retraces = _compiles() - before_compiles
+    finally:
+        daemon.stop()
+
+    assert not errors, errors[:3]
+    all_lat = np.array([x for ls in lats.values() for x in ls])
+    ticks = after_stats["ticks"] - before_stats["ticks"]
+    rows = after_stats["batch_rows"] - before_stats["batch_rows"]
+    return dict(
+        bench="serve-concurrent-tcp",
+        host=host_fingerprint(),
+        tenants=tenants, rounds=rounds,
+        n_hosts=n_hosts, max_tasks=max_tasks,
+        batch_window_ms=round(batch_window * 1e3, 3),
+        warm_s=round(warm_s, 3),
+        wall_s=round(wall_s, 3),
+        answers=int(all_lat.size),
+        answers_per_s=round(all_lat.size / wall_s, 1),
+        p50_ms=round(float(np.percentile(all_lat, 50)) * 1e3, 3),
+        p99_ms=round(float(np.percentile(all_lat, 99)) * 1e3, 3),
+        mean_ms=round(float(all_lat.mean()) * 1e3, 3),
+        mean_batch_rows=round(rows / max(ticks, 1), 2),
+        ticks=int(ticks),
+        warm_retraces=int(warm_retraces),
+        sheds=int(after_stats["sheds"] - before_stats["sheds"]),
+    )
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds for CI smoke runs")
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="snapshots per tenant in the measured phase")
+    ap.add_argument("--hosts", type=int, default=16)
+    ap.add_argument("--max-tasks", type=int, default=16)
+    ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    rounds = args.rounds or (25 if args.quick else 100)
+    out = bench_serve(args.tenants, rounds, args.hosts, args.max_tasks,
+                      batch_window=args.batch_window_ms / 1e3)
+
+    path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    write_csv("serve_bench.csv", ["metric", "value"],
+              [[k, json.dumps(v)] for k, v in out.items()])
+
+    print(json.dumps(out, indent=1, sort_keys=True))
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Prediction as a service: the fused START decision step behind a
+long-running daemon.
+
+Two tenants stream telemetry snapshots to one ``ServiceDaemon`` over
+its stdlib JSON-lines TCP transport.  The daemon's batch worker
+coalesces concurrent tenants into a single device dispatch against one
+shared Encoder-LSTM, answers each with its E_S / per-task straggler
+scores / mitigation actions, and feeds completed-job durations into the
+continuous-retraining replay buffer.  The demo then runs one
+retrain -> shadow-eval -> promote cycle and an instant rollback, and
+finally shows the pod runtime driving the same service as a client
+(``start-pod-service``).
+
+    PYTHONPATH=src python examples/predict_service.py
+"""
+import numpy as np
+
+from repro.core import features
+from repro.distributed.straggler_runtime import (RuntimeConfig,
+                                                 ServiceBackedPodPolicy,
+                                                 StragglerRuntime)
+from repro.policy import wire
+from repro.service import Profile, ServiceConfig, ServiceDaemon
+
+N_HOSTS, MAX_TASKS, HORIZON = 4, 6, 5
+HOT = 2            # chronically overloaded host
+
+
+def snapshot(rng, tenant, seq, job_id, q, finished=None):
+    """One interval of synthetic tenant telemetry (hot host planted)."""
+    m_h = rng.random((N_HOSTS, features.HOST_FEATURES)) \
+        .astype(np.float32)
+    m_h[HOT, :3] *= 1.8
+    m_t = np.zeros((MAX_TASKS, features.TASK_FEATURES), np.float32)
+    m_t[:q] = rng.random((q, features.TASK_FEATURES))
+    tasks = [(100 * job_id + i, (HOT + i) % N_HOSTS, i)
+             for i in range(q)]
+    done = []
+    if finished is not None:
+        times = 1.0 + rng.pareto(2.2, 3 * q).astype(np.float32)
+        done = [{"id": finished, "times": times.tolist()}]
+    return wire.snapshot_to_wire(
+        tenant, seq, m_h,
+        jobs=[wire.job_to_wire(job_id, q, m_t, tasks=tasks)],
+        done=done)
+
+
+def main() -> None:
+    profile = Profile(n_hosts=N_HOSTS, max_tasks=MAX_TASKS,
+                      horizon=HORIZON, trigger="per_task")
+    cfg = ServiceConfig(profile=profile, min_train_pairs=6,
+                        eval_holdback=3, train_epochs=15)
+    rng = np.random.default_rng(0)
+
+    with ServiceDaemon(cfg, port=0) as daemon:
+        print(f"daemon listening on {daemon.host}:{daemon.port}")
+        clients = {t: daemon.tcp_client(t) for t in ("etl", "web")}
+        for t, c in clients.items():
+            print(f"hello[{t}]: {c.hello(profile)}")
+
+        # stream telemetry; each job completes after three intervals and
+        # its durations land in the retraining replay buffer
+        for seq in range(12):
+            for t, c in clients.items():
+                job = seq // 3
+                fin = job - 1 if seq % 3 == 0 and job > 0 else None
+                snap = snapshot(rng, t, seq, job, q=3, finished=fin)
+                if t == "web" and seq == 5:   # a buggy exporter...
+                    snap["m_h"][0] = float("nan")
+                r = c.snapshot(snap)
+                jobs = r["jobs"][0]
+                note = f" sanitized={r['sanitized']}" \
+                    if r["sanitized"] else ""
+                acts = [a["kind"] for a in jobs["actions"]]
+                print(f"seq {seq:2d} [{t}] E_S={jobs['e_s']:.3f} "
+                      f"scores={np.round(jobs['scores'], 3).tolist()}"
+                      f"{' actions=' + str(acts) if acts else ''}{note}")
+
+        # continuous retraining: fit a candidate on the buffered pairs,
+        # shadow-evaluate it on the held-back newest telemetry, promote
+        # only if it does not regress — then roll straight back
+        rep = clients["etl"].retrain()
+        print(f"retrain: promoted={rep['promoted']} "
+              f"version={rep.get('version')} "
+              f"champion_loss={rep.get('champion_loss'):.4f} "
+              f"candidate_loss={rep.get('candidate_loss'):.4f}")
+        print(f"rollback: {clients['etl'].rollback()}")
+        stats = clients["etl"].stats()
+        print(f"stats: tenants={stats['tenants']} "
+              f"ticks={stats['ticks']} batch_rows={stats['batch_rows']} "
+              f"buffer_pairs={stats['buffer_pairs']} "
+              f"promotions={stats['promotions']}")
+        for c in clients.values():
+            c.bye()
+
+    # the pod runtime as a service tenant: same wire format, zero
+    # infrastructure (a private in-process service on first use)
+    pol = ServiceBackedPodPolicy()
+    rt = StragglerRuntime(RuntimeConfig(n_hosts=6, horizon=HORIZON),
+                          policy=pol)
+    rng = np.random.default_rng(1)
+    for _ in range(12):
+        st = 1.0 + 0.1 * rng.random(6)
+        st[4] *= 2.5
+        rt.observe_step(st)
+        rt.decide()
+    resp = pol.last_response
+    print(f"pod tenant: E_S={resp['jobs'][0]['e_s']:.3f} "
+          f"actions={rt.action_counts} "
+          f"buffered_pairs={len(pol.client.service.buffer)}")
+
+
+if __name__ == "__main__":
+    main()

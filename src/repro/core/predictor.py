@@ -237,6 +237,7 @@ class StragglerPredictor:
         #: error recovery)
         self._row_hist = collections.deque(maxlen=self.horizon)
         self._stage_bufs: dict[int, np.ndarray] = {}  # per-bucket staging
+        self._scalar_cache = None  # device (k, beta_scale) for serving
         self.h2d_stages = 0        # host->device staging uploads performed
 
     def __getstate__(self):
@@ -247,6 +248,7 @@ class StragglerPredictor:
         d["_ring"] = None
         d["_ring_rows"] = 0
         d["_stage_bufs"] = {}
+        d["_scalar_cache"] = None
         return d
 
     def push_host_row(self, m_h: np.ndarray) -> None:
@@ -365,6 +367,83 @@ class StragglerPredictor:
         # all inputs already device-resident, one E_S readback
         _, _, _, e_s = _pareto_tail(ab, qd, kd, bsd)
         return np.asarray(e_s)[:n]
+
+    # ------------------------ multi-tenant serving -------------------------
+
+    def _scalars_dev(self) -> tuple[jax.Array, jax.Array]:
+        """Device-resident (k, beta_scale), cached per value — the
+        serving batch path must not re-upload scalar hyper-parameters
+        every tick (the transfer-guard accounting pins it)."""
+        key = (float(self.k), float(self.beta_scale))
+        cached = getattr(self, "_scalar_cache", None)
+        if cached is None or cached[0] != key:
+            cached = (key, (self._stage(np.float32(self.k)),
+                            self._stage(np.float32(self.beta_scale))))
+            self._scalar_cache = cached
+        return cached[1]
+
+    def predict_tenants(self, host_seqs: list, mt_list: list,
+                        q_list: list, per_task: bool = False) -> list:
+        """Multi-tenant batched prediction (the serving daemon's batch
+        tick): many small clusters share one device-resident model and
+        one network dispatch.
+
+        Args:
+            host_seqs: per-tenant ``(T, n_hosts, HOST_FEATURES)`` (or
+                pre-flattened ``(T, host_dim)``) host history windows,
+                ``T == horizon`` for every tenant.
+            mt_list: per-tenant ``(n_i, max_tasks, TASK_FEATURES)``
+                current task matrices.
+            q_list: per-tenant ``(n_i,)`` true task counts.
+            per_task: also return per-task scores.
+
+        The tenants' job axes are concatenated, each job row carries its
+        own tenant's host block, and the combined batch pads to ONE
+        power-of-two bucket — so the jitted network compiles once per
+        bucket size regardless of how tenants interleave, and a warm
+        tick is one dispatch.  Padded rows replicate the last tenant's
+        host block, which makes the single-tenant assembly byte-identical
+        to :meth:`_predict_bucketed`'s (and therefore bitwise-equal to
+        :meth:`predict_interval` — per-row math is row-independent at a
+        fixed batch shape).  All uploads go through :meth:`_stage`.
+
+        Returns a list with one ``e_s`` array per tenant, or one
+        ``(e_s, scores)`` pair per tenant when ``per_task``.
+        """
+        t = self.horizon
+        host_dim = self.host_dim
+        ns = [int(m.shape[0]) for m in mt_list]
+        total = int(sum(ns))
+        nb = bucket_size(total)
+        self.buckets_used.add(nb)
+        xs = np.zeros((t, nb, self.input_dim), np.float32)
+        qp = np.ones(nb, np.float32)
+        lo = 0
+        for seq, mt, q, n in zip(host_seqs, mt_list, q_list, ns):
+            hi = lo + n
+            mh_flat = np.asarray(seq, np.float32).reshape(t, 1, host_dim)
+            xs[:, lo:hi, :host_dim] = mh_flat
+            xs[:, lo:hi, host_dim:] = \
+                np.asarray(mt, np.float32).reshape(1, n, -1)
+            qp[lo:hi] = np.asarray(q, np.float32)
+            lo = hi
+        if total < nb and host_seqs:
+            xs[:, total:, :host_dim] = np.asarray(
+                host_seqs[-1], np.float32).reshape(t, 1, host_dim)
+        kd, bsd = self._scalars_dev()
+        ab = net.predict_sequence(self.params, self._stage(xs),
+                                  use_pallas=self.use_pallas_cell)
+        if per_task:
+            out = np.asarray(_pareto_tail_per_task(
+                ab, self._stage(qp), kd, bsd,
+                self._stage(np.ascontiguousarray(
+                    xs[-1, :, host_dim:]))))
+            return [(out[lo:lo + n, 0], out[lo:lo + n, 1:])
+                    for lo, n in zip(np.cumsum([0] + ns[:-1]), ns)]
+        _, _, _, e_s = _pareto_tail(ab, self._stage(qp), kd, bsd)
+        e_s = np.asarray(e_s)
+        return [e_s[lo:lo + n]
+                for lo, n in zip(np.cumsum([0] + ns[:-1]), ns)]
 
     # ---------------------------- inference -------------------------------
 

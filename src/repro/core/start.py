@@ -50,12 +50,19 @@ class STARTController:
                  ma_decay: float = 0.8, beta_scale: float = 1.0,
                  use_fused_step: bool = True, trigger: str = "milestone",
                  score_on: float = 0.0, hysteresis: int = 2,
-                 cooldown: int = 5):
+                 cooldown: int = 5,
+                 predictor: StragglerPredictor | None = None):
         if trigger not in ("milestone", "per_task"):
             raise ValueError(f"unknown trigger mode {trigger!r}")
-        self.predictor = StragglerPredictor(
-            n_hosts=n_hosts, max_tasks=max_tasks, k=k, horizon=horizon,
-            seed=seed, beta_scale=beta_scale)
+        # an injected predictor lets many controllers share one
+        # device-resident model (the serving daemon's per-tenant
+        # controllers); its hyper-parameters win over the ctor's
+        if predictor is not None:
+            k, horizon = predictor.k, predictor.horizon
+        self.predictor = predictor if predictor is not None \
+            else StragglerPredictor(
+                n_hosts=n_hosts, max_tasks=max_tasks, k=k, horizon=horizon,
+                seed=seed, beta_scale=beta_scale)
         self.ma = mitigation.StragglerMovingAverage(n_hosts, decay=ma_decay)
         self.horizon = horizon
         self.use_fused_step = use_fused_step and not os.environ.get(
@@ -207,6 +214,18 @@ class STARTController:
             return self._decide_per_task(job_ids, m_t, q, deadline,
                                          incomplete_fn, host_load)
         e_s = self.predict_es_batch(job_ids, m_t, q)
+        return self.apply_milestone(job_ids, e_s, open_counts, deadline,
+                                    incomplete_fn, host_load)
+
+    def apply_milestone(self, job_ids: np.ndarray, e_s: np.ndarray,
+                        open_counts: np.ndarray, deadline: np.ndarray,
+                        incomplete_fn,
+                        host_load: np.ndarray | None = None
+                        ) -> list[mitigation.Action]:
+        """Milestone-trigger tail of :meth:`decide_arrays` over an
+        externally supplied (already sanitized) E_S batch — the serving
+        daemon predicts for many tenants in one dispatch and applies
+        each tenant's trigger through this seam."""
         n_mit = np.floor(e_s)
         trig = (n_mit >= 1.0) & (open_counts <= n_mit)
         actions: list[mitigation.Action] = []
@@ -247,6 +266,17 @@ class STARTController:
         at a contended host (its streak keeps building meanwhile, so the
         fire is deferred, not forgotten)."""
         e_s, scores = self.predict_scores_batch(job_ids, m_t, q)
+        return self.apply_per_task(job_ids, e_s, scores, deadline,
+                                   incomplete_fn, host_load)
+
+    def apply_per_task(self, job_ids: np.ndarray, e_s: np.ndarray,
+                       scores: np.ndarray, deadline: np.ndarray,
+                       incomplete_fn,
+                       host_load: np.ndarray | None = None
+                       ) -> list[mitigation.Action]:
+        """Per-task-trigger tail of :meth:`_decide_per_task` over an
+        externally supplied (already sanitized) prediction batch — the
+        serving-daemon seam; see :meth:`apply_milestone`."""
         self._tick += 1
         actions: list[mitigation.Action] = []
         in_set: set[int] = set()

@@ -40,7 +40,7 @@ import math
 
 import numpy as np
 
-from repro.core import pareto
+from repro.core import features, pareto
 from repro.policy import (Action, ActionKind, EVENT_INTERVAL, Policy,
                           TelemetryView, host_action, register)
 from repro.policy.telemetry import (CANCELLED, RUNNING, HostTelemetry,
@@ -100,6 +100,15 @@ class StartPodPolicy(Policy):
 
     name = "start-pod"
 
+    def _expected_stragglers(self, view: TelemetryView) -> float:
+        """E_S for the current interval — the prediction seam.  The base
+        policy fits the MLE Pareto tail over recent step times;
+        subclasses swap in the Encoder-LSTM (online-trained or served)
+        without touching the trigger/translation logic."""
+        cfg = view.config
+        return expected_stragglers(view.extra["step_times"], cfg.n_hosts,
+                                   cfg.k, cfg.horizon)
+
     def decide(self, view: TelemetryView) -> list[Action]:
         cfg = view.config
         step_times = view.extra.get("step_times", ())
@@ -114,8 +123,7 @@ class StartPodPolicy(Policy):
             if online[h]:
                 actions.append(host_action(ActionKind.EVICT, h))
                 evicting.add(h)
-        e_s = expected_stragglers(step_times, cfg.n_hosts, cfg.k,
-                                  cfg.horizon)
+        e_s = self._expected_stragglers(view)
         n_mit = int(math.floor(e_s))
         if n_mit <= 0:
             return actions
@@ -193,8 +201,7 @@ class StartEagerPodPolicy(StartPodPolicy):
         last = np.asarray(step_times[-1], float)
         med = np.median(last[last > 0]) if (last > 0).any() else 1.0
         rel = last / max(med, 1e-9)
-        e_s = expected_stragglers(step_times, cfg.n_hosts, cfg.k,
-                                  cfg.horizon)
+        e_s = self._expected_stragglers(view)
         n_pred = int(math.floor(e_s)) if math.isfinite(e_s) else 0
         n_pred = min(max(n_pred, 0), cfg.n_hosts)
         members = {int(h) for h in np.argsort(-rel)[:n_pred]}
@@ -214,6 +221,226 @@ class StartEagerPodPolicy(StartPodPolicy):
         for h in [h for h in self._streak if h not in members]:
             del self._streak[h]
         return actions
+
+
+@register("start-pod-online", substrates=("pod",),
+          description="start-pod with the Encoder-LSTM trained online "
+                      "on completed step windows: E_S comes from the "
+                      "network once enough windows have been fit, the "
+                      "MLE tail until then")
+class OnlineStartPodPolicy(StartPodPolicy):
+    """START's full pipeline on the pod, trained online.
+
+    :class:`StartPodPolicy` only ever runs the paper's *fallback* — the
+    MLE Pareto fit over raw step times (no Encoder-LSTM).  This policy
+    closes the gap: every completed horizon-step window becomes one
+    training pair through the predictor's standard ``fit()`` path (the
+    pod is one ``n_hosts``-task job; targets are the MLE fit of the
+    window's per-host elapsed times, the same construction the
+    simulator's offline pretrainer uses), and once ``min_windows`` pairs
+    have been absorbed, E_S comes from the network's (alpha, beta) head
+    instead of the raw-tail fit.  Everything downstream — backup-set
+    sizing, eviction, hysteresis in the eager subclass — is inherited
+    unchanged through the ``_expected_stragglers`` seam.
+    """
+
+    name = "start-pod-online"
+
+    def __init__(self, epochs_per_update: int = 8, lr: float = 1e-3,
+                 min_windows: int = 2, seed: int = 0):
+        self.epochs_per_update = epochs_per_update
+        self.lr = lr
+        self.min_windows = min_windows
+        self.seed = seed
+        self.predictor = None
+        self._seen = 0              # completed windows already trained on
+        self._xs: list[np.ndarray] = []
+        self._ys: list[list[float]] = []
+        self.trained_pairs = 0
+
+    # ---------------- feature construction (pod -> paper matrices) ------
+
+    @staticmethod
+    def _m_h(util: np.ndarray) -> np.ndarray:
+        """(n, 4) pod utilization -> (n, HOST_FEATURES) M_H.  The pod
+        has no price/power/capacity telemetry: capacities, cost and
+        power normalize to ones (homogeneous fleet), n_tasks is one
+        shard per host."""
+        n = util.shape[0]
+        ones = np.ones(n, np.float32)
+        return features.host_matrix_np(
+            np.clip(util, 0.0, 2.0), np.ones((n, 4), np.float32),
+            ones, ones, np.ones(n, np.int64))
+
+    @staticmethod
+    def _m_t(util: np.ndarray) -> np.ndarray:
+        """(n, 4) pod utilization -> (n, TASK_FEATURES) M_T: each host's
+        shard "requires" what the host currently burns; previous host is
+        the host itself (shards are pinned)."""
+        n = util.shape[0]
+        return features.task_matrix_batch_np(
+            np.clip(util, 0.0, 1.0), np.arange(n),
+            np.zeros(n, np.int64), np.arange(n), 1, n, n)[0]
+
+    def _host_window(self, util_history: list,
+                     t_end: int, horizon: int) -> np.ndarray:
+        """Trailing ``horizon`` M_H rows ending at step ``t_end``
+        (1-based), left-clamped to the first observation — the same
+        windowing as ``NoOpRecorder.dataset``."""
+        idx = np.maximum(np.arange(t_end - horizon, t_end), 0)
+        idx = np.minimum(idx, len(util_history) - 1)
+        return np.stack([self._m_h(np.asarray(util_history[i],
+                                              np.float32))
+                         for i in idx])
+
+    # ---------------- online training -----------------------------------
+
+    def _ensure_predictor(self, cfg) -> None:
+        if self.predictor is None:
+            from repro.core.predictor import StragglerPredictor
+            self.predictor = StragglerPredictor(
+                n_hosts=cfg.n_hosts, max_tasks=cfg.n_hosts, k=cfg.k,
+                horizon=cfg.horizon, seed=self.seed, beta_scale=1.0)
+
+    def _maybe_train(self, view: TelemetryView) -> None:
+        cfg = view.config
+        new = view.completed_jobs[self._seen:]
+        if not new:
+            return
+        self._ensure_predictor(cfg)
+        h = cfg.horizon
+        for rec in new:
+            t_end = min(int(rec["t"]), len(view.util_history))
+            seq = self._host_window(view.util_history, t_end, h)
+            m_t = self._m_t(np.asarray(
+                view.util_history[t_end - 1], np.float32))
+            x = np.concatenate(
+                [seq.reshape(h, -1),
+                 np.broadcast_to(m_t.reshape(-1),
+                                 (h, m_t.size))], axis=1)
+            self._xs.append(x.astype(np.float32))
+            times = np.asarray(rec["times"], np.float32)
+            a, b = pareto.fit_pareto_np(times[times > 0].reshape(1, -1))
+            self._ys.append([float(a[0]), float(b[0])])
+        self._seen = len(view.completed_jobs)
+        xs = np.stack(self._xs, axis=1)              # (h, pairs, dim)
+        ys = np.array(self._ys, np.float32)
+        self.predictor.fit(xs, ys, epochs=self.epochs_per_update,
+                           lr=self.lr)
+        self.trained_pairs = len(self._xs)
+
+    # ---------------- the prediction seam --------------------------------
+
+    def _expected_stragglers(self, view: TelemetryView) -> float:
+        self._maybe_train(view)
+        cfg = view.config
+        if self.trained_pairs < self.min_windows:
+            return super()._expected_stragglers(view)
+        n = cfg.n_hosts
+        t_end = len(view.util_history)
+        seq = self._host_window(view.util_history, t_end, cfg.horizon)
+        m_t = self._m_t(np.asarray(view.util_history[-1], np.float32))
+        pred = self.predictor.predict_features(
+            seq, m_t[None], np.array([float(n)], np.float32))
+        e_s = float(np.asarray(pred.e_s)[0])
+        if not math.isfinite(e_s):
+            return super()._expected_stragglers(view)
+        return float(np.clip(e_s, 0.0, n))
+
+
+@register("start-pod-service", substrates=("pod",),
+          description="pod substrate as a prediction-service tenant: "
+                      "per-step snapshots go to a repro.service daemon "
+                      "(in-process by default), whose wire actions are "
+                      "translated back to backup-shard/evict")
+class ServiceBackedPodPolicy(Policy):
+    """The pod substrate as a client of ``repro.service``.
+
+    Each step the policy serializes the runtime's telemetry into one
+    wire snapshot (M_H from host utilization, one ``n_hosts``-task job
+    for the current horizon window, completed windows as ``done``
+    records feeding the service's continuous retraining) and answers
+    with the service's mitigation actions — speculate becomes a backup
+    shard, rerun an eviction, via the runtime's standard translation.
+
+    With no explicit ``client`` the policy spins up a private in-process
+    :class:`~repro.service.core.PredictionService` on first use (the
+    zero-infrastructure path); hand it a
+    :class:`~repro.service.daemon.ServiceClient` to share a real daemon
+    across pods — the tenant name is ``self.tenant``.
+    """
+
+    name = "start-pod-service"
+
+    def __init__(self, client=None, tenant: str = "pod0",
+                 trigger: str = "per_task", hysteresis: int = 2,
+                 cooldown: int = 5):
+        self.client = client
+        self.tenant = tenant
+        self.trigger = trigger
+        self.hysteresis = hysteresis
+        self.cooldown = cooldown
+        self._admitted = False
+        self._seq = 0
+        self._sent_done = 0
+        self.last_response: dict | None = None
+
+    def _ensure_client(self, cfg) -> None:
+        from repro.service import (LocalClient, PredictionService,
+                                   Profile, ServiceConfig)
+        profile = Profile(
+            n_hosts=cfg.n_hosts, max_tasks=cfg.n_hosts,
+            horizon=cfg.horizon, k=cfg.k, trigger=self.trigger,
+            hysteresis=self.hysteresis, cooldown=self.cooldown)
+        if self.client is None:
+            svc = PredictionService(ServiceConfig(profile=profile))
+            self.client = LocalClient(svc, self.tenant)
+        if not self._admitted:
+            resp = self.client.hello(profile)
+            if not resp.get("ok"):
+                raise RuntimeError(f"service admission failed: {resp}")
+            self._admitted = True
+
+    def decide(self, view: TelemetryView) -> list[Action]:
+        from repro.policy import wire
+
+        cfg = view.config
+        if not view.extra.get("step_times"):
+            return []
+        self._ensure_client(cfg)
+        n = cfg.n_hosts
+        util = np.asarray(view.hosts.util, np.float32)
+        m_h = OnlineStartPodPolicy._m_h(util)
+        m_t = OnlineStartPodPolicy._m_t(util)
+        online = view.hosts.online()
+        window = len(view.completed_jobs)     # current window's job id
+        tasks = [(h, h, h) for h in range(n) if online[h]]
+        done = [{"id": int(rec["job"]),
+                 "times": [float(x) for x in rec["times"]
+                           if float(x) > 0]}
+                for rec in view.completed_jobs[self._sent_done:]]
+        snap = wire.snapshot_to_wire(
+            self.tenant, self._seq, m_h,
+            jobs=[wire.job_to_wire(window, n, m_t, deadline=True,
+                                   tasks=tasks)],
+            done=done)
+        self._seq += 1
+        resp = self.client.snapshot(snap)
+        self.last_response = resp
+        if not resp.get("ok"):
+            return []                 # shed/degraded: fail open, no acts
+        self._sent_done = len(view.completed_jobs)
+        actions: list[Action] = []
+        for job in resp.get("jobs", ()):
+            for a in job.get("actions", ()):
+                actions.append(wire.action_from_wire(a))
+        return actions
+
+    def forget_tasks(self, task_ids) -> None:
+        # window boundary: the service's per-task trigger state is
+        # scoped to the service-side controller; job ids advance per
+        # window so no client-side state needs dropping
+        pass
 
 
 class StragglerRuntime:

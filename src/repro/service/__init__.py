@@ -1,0 +1,21 @@
+"""Prediction-as-a-service over the fused START decision step.
+
+The repo's third substrate (after the cloud simulator and the
+distributed pod runtime) and its first network-facing surface: a
+long-running daemon that answers telemetry snapshots with E_S
+predictions, per-task straggler scores and mitigation actions, batching
+many small tenant clusters into one device dispatch, with versioned
+continuous retraining gated by shadow evaluation.
+"""
+from repro.service.core import (PredictionService, ServiceConfig,
+                                TenantState)
+from repro.service.daemon import (LocalClient, ServiceClient,
+                                  ServiceDaemon)
+from repro.service.protocol import Profile
+from repro.service.sanitize import TelemetryError, sanitize_snapshot
+
+__all__ = [
+    "PredictionService", "ServiceConfig", "TenantState",
+    "ServiceDaemon", "LocalClient", "ServiceClient",
+    "Profile", "TelemetryError", "sanitize_snapshot",
+]

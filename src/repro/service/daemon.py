@@ -1,0 +1,256 @@
+"""Transports for the prediction service: threads, TCP, clients.
+
+``ServiceDaemon`` owns a :class:`PredictionService` plus
+
+  * a **batch worker** thread: waits up to ``batch_window`` seconds for
+    snapshots to queue, then runs one ``tick()`` — many tenants arriving
+    within a window share one device dispatch;
+  * a **stdlib TCP server** (``socketserver.ThreadingTCPServer``)
+    speaking JSON-lines — one connection per tenant, requests answered
+    in order on that connection;
+  * an optional **retrain** thread that runs a
+    retrain/shadow-eval/promote cycle whenever the service flags one due
+    (``retrain_every`` snapshots).
+
+``LocalClient`` drives the same service in-process with zero transport
+(the simulator / tests path); ``ServiceClient`` is the TCP twin with an
+identical surface, so swapping transports is a one-line change.
+"""
+from __future__ import annotations
+
+import socket
+import socketserver
+import threading
+
+from repro.service import protocol
+from repro.service.core import PredictionService, ServiceConfig
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self) -> None:
+        svc: PredictionService = self.server.service  # type: ignore
+        for msg in protocol.recv_lines(self.rfile):
+            if msg is None:
+                resp = protocol.error("bad-frame", "not a JSON object")
+            else:
+                # enqueue only; the shared batch worker resolves it —
+                # that is what coalesces concurrent tenants into one
+                # dispatch
+                resp = svc.handle(msg, auto_tick=False,
+                                  timeout=self.server.timeout_s)
+            try:
+                self.wfile.write(protocol.encode(resp))
+                self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError):
+                return
+            if msg is not None and msg.get("op") == "bye":
+                return
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+
+class ServiceDaemon:
+    """Long-running serving process (in one Python process).
+
+    Args:
+        cfg: service configuration (profile, queues, retraining).
+        host/port: TCP bind address; ``port=0`` picks a free port
+            (read it back from ``.port``).  ``port=None`` disables the
+            TCP listener (in-process only).
+        batch_window: seconds the batch worker waits for more tenants
+            before dispatching a tick.
+    """
+
+    def __init__(self, cfg: ServiceConfig, host: str = "127.0.0.1",
+                 port: int | None = 0, batch_window: float = 0.002,
+                 timeout_s: float = 30.0):
+        self.service = PredictionService(cfg)
+        self.batch_window = batch_window
+        self._stop = threading.Event()
+        self._kick = threading.Event()
+        self._worker = threading.Thread(target=self._run_worker,
+                                        daemon=True)
+        self._retrainer = threading.Thread(target=self._run_retrainer,
+                                           daemon=True)
+        self._server = None
+        self._server_thread = None
+        self.host, self.port = host, None
+        if port is not None:
+            self._server = _Server((host, port), _Handler)
+            self._server.service = self.service       # type: ignore
+            self._server.timeout_s = timeout_s        # type: ignore
+            self.port = self._server.server_address[1]
+            self._server_thread = threading.Thread(
+                target=self._server.serve_forever,
+                kwargs={"poll_interval": 0.05}, daemon=True)
+        # submissions kick the worker so an idle service answers within
+        # one batch window, not one polling period
+        _orig_submit = self.service.submit
+
+        def _submit(tenant, snap):
+            p = _orig_submit(tenant, snap)
+            self._kick.set()
+            return p
+        self.service.submit = _submit                 # type: ignore
+
+    # ------------------------------ lifecycle ---------------------------
+
+    def start(self) -> "ServiceDaemon":
+        self._worker.start()
+        self._retrainer.start()
+        if self._server_thread is not None:
+            self._server_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._kick.set()
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+        self._worker.join(timeout=5)
+        self._retrainer.join(timeout=5)
+        # resolve anything still queued so no client hangs
+        with self.service.lock:
+            while self.service.pending:
+                self.service.pending.popleft().resolve(
+                    protocol.error("shutdown", "daemon stopping"))
+
+    def __enter__(self) -> "ServiceDaemon":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------ threads -----------------------------
+
+    def _run_worker(self) -> None:
+        while not self._stop.is_set():
+            self._kick.wait(timeout=0.25)
+            self._kick.clear()
+            if self._stop.is_set():
+                return
+            # batch window: let concurrent tenants pile in, then one tick
+            if self.batch_window:
+                self._stop.wait(self.batch_window)
+            while self.service.tick():
+                pass
+
+    def _run_retrainer(self) -> None:
+        while not self._stop.wait(0.05):
+            if self.service._retrain_due:
+                try:
+                    self.service.retrain_now()
+                except Exception:
+                    self.service._retrain_due = False
+
+    # ------------------------------ convenience -------------------------
+
+    def local_client(self, tenant: str) -> "LocalClient":
+        return LocalClient(self.service, tenant)
+
+    def tcp_client(self, tenant: str) -> "ServiceClient":
+        if self.port is None:
+            raise RuntimeError("daemon started without a TCP listener")
+        return ServiceClient(self.host, self.port, tenant)
+
+
+class LocalClient:
+    """In-process handle: same request surface as the TCP client, no
+    transport.  ``auto_tick`` answers synchronously when no daemon
+    worker is running (plain ``PredictionService`` use)."""
+
+    def __init__(self, service: PredictionService, tenant: str,
+                 auto_tick: bool | None = None):
+        self.service = service
+        self.tenant = tenant
+        if auto_tick is None:
+            # a daemon replaces service.submit with a kicking wrapper
+            # (a plain function, not a bound method); its batch worker
+            # then owns the ticking
+            auto_tick = getattr(service.submit, "__func__",
+                                None) is PredictionService.submit
+        self.auto_tick = auto_tick
+
+    def request(self, msg: dict, timeout: float = 30.0) -> dict:
+        return self.service.handle(msg, auto_tick=self.auto_tick,
+                                   timeout=timeout)
+
+    def hello(self, profile) -> dict:
+        return self.request({"op": "hello", "tenant": self.tenant,
+                             "profile": profile.to_wire()})
+
+    def snapshot(self, snap: dict) -> dict:
+        snap = dict(snap)
+        snap["op"] = "snapshot"
+        snap["tenant"] = self.tenant
+        return self.request(snap)
+
+    def stats(self) -> dict:
+        return self.request({"op": "stats"})
+
+    def retrain(self) -> dict:
+        return self.request({"op": "retrain"})
+
+    def rollback(self) -> dict:
+        return self.request({"op": "rollback"})
+
+    def bye(self) -> dict:
+        return self.request({"op": "bye", "tenant": self.tenant})
+
+    def close(self) -> None:
+        pass
+
+
+class ServiceClient:
+    """Blocking JSON-lines TCP client (one socket, ordered replies)."""
+
+    def __init__(self, host: str, port: int, tenant: str,
+                 timeout: float = 30.0):
+        self.tenant = tenant
+        self._sock = socket.create_connection((host, port),
+                                              timeout=timeout)
+        self._file = self._sock.makefile("rwb")
+
+    def request(self, msg: dict, timeout: float | None = None) -> dict:
+        self._file.write(protocol.encode(msg))
+        self._file.flush()
+        line = self._file.readline()
+        if not line:
+            raise ConnectionError("service closed the connection")
+        return protocol.decode(line)
+
+    def hello(self, profile) -> dict:
+        return self.request({"op": "hello", "tenant": self.tenant,
+                             "profile": profile.to_wire()})
+
+    def snapshot(self, snap: dict) -> dict:
+        snap = dict(snap)
+        snap["op"] = "snapshot"
+        snap["tenant"] = self.tenant
+        return self.request(snap)
+
+    def stats(self) -> dict:
+        return self.request({"op": "stats"})
+
+    def retrain(self) -> dict:
+        return self.request({"op": "retrain"})
+
+    def rollback(self) -> dict:
+        return self.request({"op": "rollback"})
+
+    def bye(self) -> dict:
+        try:
+            return self.request({"op": "bye", "tenant": self.tenant})
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        try:
+            self._file.close()
+            self._sock.close()
+        except OSError:
+            pass

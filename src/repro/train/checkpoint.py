@@ -96,6 +96,99 @@ def restore(path: str, step: int, like_tree, shardings=None):
     return tree
 
 
+class VersionStore:
+    """Versioned model checkpoints with promote / rollback semantics.
+
+    Built on :func:`save` / :func:`restore` (per-leaf ``.npy`` shards,
+    staging dir + atomic rename), so a torn version can never load.  On
+    top of the step directories it keeps a ``CURRENT`` json pointer —
+    ``{"current": v, "history": [...]}`` written via tmp + rename — that
+    records which version is *serving* and the promotion trail.  A
+    version number is the ``save()`` step; saving never changes what is
+    served until :meth:`promote` flips the pointer, and
+    :meth:`rollback` flips it back to the previous history entry.
+
+    Retention keeps the last ``keep`` saved versions but never deletes
+    a version still on the promotion history (rollback must always have
+    somewhere to land).
+    """
+
+    _PTR = "CURRENT"
+
+    def __init__(self, path: str, keep: int = 4):
+        self.path = path
+        self.keep = keep
+        os.makedirs(path, exist_ok=True)
+
+    # -- pointer ----------------------------------------------------
+    def _read_ptr(self) -> dict:
+        p = os.path.join(self.path, self._PTR)
+        if not os.path.exists(p):
+            return {"current": None, "history": []}
+        with open(p) as f:
+            return json.load(f)
+
+    def _write_ptr(self, ptr: dict) -> None:
+        tmp = os.path.join(self.path, f".{self._PTR}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(ptr, f)
+        os.replace(tmp, os.path.join(self.path, self._PTR))
+
+    def current(self) -> int | None:
+        return self._read_ptr()["current"]
+
+    def history(self) -> list[int]:
+        return list(self._read_ptr()["history"])
+
+    # -- versions ---------------------------------------------------
+    def save_version(self, version: int, tree) -> str:
+        """Persist a candidate. Does NOT change what is served."""
+        out = save(self.path, version, tree, keep=10 ** 9)
+        self._retain()
+        return out
+
+    def load_version(self, version: int, like_tree):
+        return restore(self.path, version, like_tree)
+
+    def promote(self, version: int) -> None:
+        """Flip the serving pointer to ``version`` (must be saved)."""
+        if not os.path.isdir(
+                os.path.join(self.path, f"step_{version:08d}")):
+            raise FileNotFoundError(f"version {version} not saved")
+        ptr = self._read_ptr()
+        if ptr["current"] is not None and ptr["current"] != version:
+            ptr["history"].append(ptr["current"])
+        ptr["current"] = version
+        self._write_ptr(ptr)
+        self._retain()
+
+    def rollback(self) -> int | None:
+        """Demote current to its predecessor; returns the new current
+        version, or ``None`` if there is no history to land on."""
+        ptr = self._read_ptr()
+        if not ptr["history"]:
+            return None
+        ptr["current"] = ptr["history"].pop()
+        self._write_ptr(ptr)
+        return ptr["current"]
+
+    def versions(self) -> list[int]:
+        return sorted(int(d.split("_")[1])
+                      for d in os.listdir(self.path)
+                      if d.startswith("step_"))
+
+    def _retain(self) -> None:
+        ptr = self._read_ptr()
+        pinned = set(ptr["history"])
+        if ptr["current"] is not None:
+            pinned.add(ptr["current"])
+        vs = self.versions()
+        for v in vs[:-self.keep] if len(vs) > self.keep else []:
+            if v not in pinned:
+                shutil.rmtree(
+                    os.path.join(self.path, f"step_{v:08d}"))
+
+
 class AsyncCheckpointer:
     """Background-thread writer; the step loop only pays device->host."""
 

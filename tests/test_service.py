@@ -1,0 +1,437 @@
+"""Serving-core tests: bitwise equivalence, multi-tenant batching with
+zero warm retraces, the boundary sanitizer, backpressure, and the
+versioned retrain/shadow-eval/rollback lifecycle."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import encoder_lstm as net
+from repro.core import features
+from repro.core.predictor import StragglerPredictor, fused_compile_count
+from repro.policy import wire
+from repro.policy.actions import Action, ActionKind
+from repro.service import (LocalClient, PredictionService, Profile,
+                           ServiceConfig, ServiceDaemon, TelemetryError,
+                           sanitize_snapshot)
+from repro.service import retrain as svc_retrain
+from repro.train.checkpoint import VersionStore
+
+N_HOSTS, MAX_TASKS, HORIZON = 3, 4, 5
+
+
+def profile(**kw) -> Profile:
+    return Profile(n_hosts=N_HOSTS, max_tasks=MAX_TASKS,
+                   horizon=HORIZON, **kw)
+
+
+def rand_mh(rng):
+    return rng.random((N_HOSTS, features.HOST_FEATURES)) \
+        .astype(np.float32)
+
+
+def rand_mt(rng, q=3):
+    m_t = np.zeros((MAX_TASKS, features.TASK_FEATURES), np.float32)
+    m_t[:q] = rng.random((q, features.TASK_FEATURES))
+    return m_t
+
+
+def mk_snap(tenant, seq, m_h, m_t, q=3, job_id=1, done=None):
+    tasks = [(100 + i, i % N_HOSTS, i) for i in range(q)]
+    return wire.snapshot_to_wire(
+        tenant, seq, m_h,
+        jobs=[wire.job_to_wire(job_id, q, m_t, tasks=tasks)],
+        done=done or [])
+
+
+def compile_counters():
+    return net.predict_sequence._cache_size() + fused_compile_count()
+
+
+# ------------------------------ wire format ------------------------------
+
+def test_action_wire_roundtrip():
+    a = Action(kind=ActionKind.SPECULATE, task=7, target=2, host=5)
+    b = wire.action_from_wire(wire.action_to_wire(a))
+    assert b == a
+    # defaults are omitted on the wire and restored on parse
+    small = wire.action_to_wire(Action(kind=ActionKind.RERUN, task=1))
+    assert set(small) == {"kind", "task"}
+    assert wire.action_from_wire(small).n_clones == 1
+    with pytest.raises(ValueError, match="unknown Action wire"):
+        wire.action_from_wire({"kind": "rerun", "task": 1, "zap": 2})
+
+
+def test_profile_wire_roundtrip_and_compat():
+    p = profile(trigger="per_task", score_on=0.1)
+    assert Profile.from_wire(p.to_wire()) == p
+    assert p.compatible(profile(trigger="per_task", score_on=0.1))
+    assert not p.compatible(profile())              # trigger differs
+    assert not profile().compatible(
+        Profile(n_hosts=N_HOSTS + 1, max_tasks=MAX_TASKS))
+    with pytest.raises(ValueError, match="unknown Profile"):
+        Profile.from_wire({"n_hosts": 2, "max_tasks": 2, "zap": 1})
+
+
+# ------------------------------ sanitizer --------------------------------
+
+def test_sanitizer_clamps_nonfinite_features():
+    rng = np.random.default_rng(0)
+    m_h = rand_mh(rng)
+    m_h[0, 0] = np.nan
+    m_h[1, 2] = np.inf
+    snap = mk_snap("t", 0, m_h, rand_mt(rng))
+    clean = sanitize_snapshot(snap, profile(), -1.0, mode="clamp")
+    assert np.isfinite(clean["m_h"]).all()
+    assert clean["m_h"][0, 0] == 0.0
+    assert any("non-finite" in s for s in clean["issues"])
+
+
+def test_sanitizer_reject_mode_raises_on_nonfinite():
+    rng = np.random.default_rng(0)
+    m_h = rand_mh(rng)
+    m_h[0, 0] = np.nan
+    snap = mk_snap("t", 0, m_h, rand_mt(rng))
+    with pytest.raises(TelemetryError) as e:
+        sanitize_snapshot(snap, profile(), -1.0, mode="reject")
+    assert e.value.code == "bad-telemetry"
+
+
+def test_sanitizer_drops_bad_durations():
+    rng = np.random.default_rng(0)
+    snap = mk_snap("t", 0, rand_mh(rng), rand_mt(rng),
+                   done=[{"id": 4, "times": [1.0, -3.0, np.nan, 2.0]}])
+    clean = sanitize_snapshot(snap, profile(), -1.0, mode="clamp")
+    np.testing.assert_array_equal(clean["done"][0]["times"],
+                                  np.float32([1.0, 2.0]))
+    with pytest.raises(TelemetryError):
+        sanitize_snapshot(snap, profile(), -1.0, mode="reject")
+
+
+def test_sanitizer_rejects_out_of_order_and_structural():
+    rng = np.random.default_rng(0)
+    snap = mk_snap("t", 3, rand_mh(rng), rand_mt(rng))
+    with pytest.raises(TelemetryError) as e:
+        sanitize_snapshot(snap, profile(), 3.0)  # seq replay
+    assert e.value.code == "out-of-order"
+    bad = mk_snap("t", 9, rand_mh(rng)[:, :-1], rand_mt(rng))
+    with pytest.raises(TelemetryError) as e:
+        sanitize_snapshot(bad, profile(), -1.0)  # wrong M_H shape
+    assert e.value.code == "bad-shape"
+    bad_q = mk_snap("t", 9, rand_mh(rng), rand_mt(rng))
+    bad_q["jobs"][0]["q"] = MAX_TASKS + 3
+    with pytest.raises(TelemetryError) as e:
+        sanitize_snapshot(bad_q, profile(), -1.0)
+    assert e.value.code == "bad-job"
+
+
+# --------------------------- admission / queues --------------------------
+
+def test_admission_control():
+    svc = PredictionService(ServiceConfig(profile=profile(),
+                                          max_tenants=2))
+    assert svc.hello("a", profile().to_wire())["ok"]
+    assert svc.hello("a", profile().to_wire())["rejoined"]
+    bad = svc.hello("b", profile(k=9.9).to_wire())
+    assert not bad["ok"] and bad["error"] == "incompatible-profile"
+    assert svc.hello("b", profile().to_wire())["ok"]
+    full = svc.hello("c", profile().to_wire())
+    assert not full["ok"] and full["error"] == "at-capacity"
+    # snapshots from a tenant that never said hello are refused
+    p = svc.submit("ghost", {"seq": 0})
+    assert p.result["error"] == "not-admitted"
+
+
+def test_backpressure_sheds_oldest():
+    svc = PredictionService(ServiceConfig(profile=profile(),
+                                          queue_depth=2))
+    svc.hello("a", profile().to_wire())
+    rng = np.random.default_rng(0)
+    ps = [svc.submit("a", mk_snap("a", i, rand_mh(rng), rand_mt(rng)))
+          for i in range(3)]
+    assert ps[0].result["error"] == "overload"    # shed, not dropped
+    assert ps[1].result is None and ps[2].result is None
+    svc.tick()                                     # one per tenant/tick
+    svc.tick()
+    assert ps[1].result["ok"] and ps[2].result["ok"]
+    assert svc.stats()["sheds"] == 1
+
+
+# --------------------------- bitwise equivalence -------------------------
+
+def _reference_run(m_hs, m_t, q, per_task=False):
+    """Drive a bare predictor exactly as the service tenant would."""
+    pred = StragglerPredictor(n_hosts=N_HOSTS, max_tasks=MAX_TASKS,
+                              horizon=HORIZON)
+    out = None
+    for m_h in m_hs:
+        pred.push_host_row(m_h)
+        out = pred.predict_interval(
+            m_t[None], np.array([float(q)], np.float32),
+            per_task=per_task)
+    return out
+
+
+def test_single_tenant_bitwise_equals_predict_interval():
+    rng = np.random.default_rng(7)
+    m_hs = [rand_mh(rng) for _ in range(3)]
+    m_t = rand_mt(rng)
+    svc = PredictionService(ServiceConfig(profile=profile()))
+    c = LocalClient(svc, "t0")
+    assert c.hello(profile())["ok"]
+    for i, m_h in enumerate(m_hs):
+        r = c.snapshot(mk_snap("t0", i, m_h, m_t))
+    ref = _reference_run(m_hs, m_t, 3)
+    assert r["jobs"][0]["e_s"] == float(np.asarray(ref)[0])
+
+
+def test_single_tenant_bitwise_per_task_scores():
+    rng = np.random.default_rng(8)
+    m_hs = [rand_mh(rng) for _ in range(3)]
+    m_t = rand_mt(rng)
+    prof = profile(trigger="per_task")
+    svc = PredictionService(ServiceConfig(profile=prof))
+    c = LocalClient(svc, "t0")
+    assert c.hello(prof)["ok"]
+    for i, m_h in enumerate(m_hs):
+        r = c.snapshot(mk_snap("t0", i, m_h, m_t))
+    e_ref, s_ref = _reference_run(m_hs, m_t, 3, per_task=True)
+    assert r["jobs"][0]["e_s"] == float(np.asarray(e_ref)[0])
+    np.testing.assert_array_equal(
+        np.float64(r["jobs"][0]["scores"]),
+        np.float64(np.asarray(s_ref)[0, :3]))
+
+
+def test_tcp_roundtrip_bitwise_and_json_lossless():
+    """The acceptance criterion: telemetry in over TCP -> answers out,
+    bitwise-equal to the in-process fused step (finite float32 survives
+    the float64 JSON round trip losslessly)."""
+    rng = np.random.default_rng(9)
+    m_hs = [rand_mh(rng) for _ in range(3)]
+    m_t = rand_mt(rng)
+    with ServiceDaemon(ServiceConfig(profile=profile())) as d:
+        c = d.tcp_client("tcp0")
+        assert c.hello(profile())["ok"]
+        for i, m_h in enumerate(m_hs):
+            r = c.snapshot(mk_snap("tcp0", i, m_h, m_t))
+        c.bye()
+    ref = _reference_run(m_hs, m_t, 3)
+    assert r["jobs"][0]["e_s"] == float(np.asarray(ref)[0])
+
+
+def test_malformed_tenant_never_poisons_healthy_tenant():
+    """A tenant streaming garbage is rejected at the boundary; the
+    healthy tenant's answers stay bitwise-identical to a run where the
+    malformed tenant never existed, and the service stays up."""
+    rng = np.random.default_rng(10)
+    m_hs = [rand_mh(rng) for _ in range(3)]
+    m_t = rand_mt(rng)
+    svc = PredictionService(ServiceConfig(profile=profile(),
+                                          sanitize="reject"))
+    good = LocalClient(svc, "good")
+    evil = LocalClient(svc, "evil")
+    assert good.hello(profile())["ok"] and evil.hello(profile())["ok"]
+    for i, m_h in enumerate(m_hs):
+        bad = mk_snap("evil", i, np.full_like(m_h, np.nan), m_t)
+        rb = evil.snapshot(bad)
+        assert not rb["ok"] and rb["error"] == "bad-telemetry"
+        shape = evil.snapshot(mk_snap("evil", i + 100,
+                                      m_h[:, :-1], m_t))
+        assert not shape["ok"] and shape["error"] == "bad-shape"
+        r = good.snapshot(mk_snap("good", i, m_h, m_t))
+        assert r["ok"]
+    ref = _reference_run(m_hs, m_t, 3)
+    assert r["jobs"][0]["e_s"] == float(np.asarray(ref)[0])
+    st = svc.stats()
+    assert st["ok"] and st["rejected"] == 6
+
+
+# ----------------------- multi-tenant batch serving ----------------------
+
+def _round(svc, tenants, rng, seq, m_t):
+    """Submit one snapshot per tenant, then one batch tick for all."""
+    ps = [svc.submit(t, mk_snap(t, seq, rand_mh(rng), m_t))
+          for t in tenants]
+    svc.tick()
+    for p in ps:
+        assert p.result is not None and p.result["ok"], p.result
+    return ps
+
+
+def test_interleaved_tenants_zero_warm_retraces(monkeypatch):
+    """Interleaved multi-tenant traffic must reuse the power-of-two
+    bucket cache: after each tenant-count pattern has run once, further
+    ticks compile nothing and upload only through ``_stage`` — pinned
+    under ``transfer_guard('disallow')`` exactly like the fused-step
+    test."""
+    svc = PredictionService(ServiceConfig(profile=profile()))
+    rng = np.random.default_rng(11)
+    tenants = [f"t{i}" for i in range(4)]
+    for t in tenants:
+        assert svc.hello(t, profile().to_wire())["ok"]
+    m_t = rand_mt(rng)
+    seq = 0
+    # warm every pattern: single-tenant (fused), 2-, 3- and 4-tenant
+    for group in ([tenants[0]], tenants[:2], tenants[:3], tenants):
+        _round(svc, group, rng, seq, m_t)
+        seq += 1
+
+    orig = StragglerPredictor._stage
+
+    def sanctioned(self, arr):
+        with jax.transfer_guard_host_to_device("allow"):
+            return orig(self, arr)
+
+    monkeypatch.setattr(StragglerPredictor, "_stage", sanctioned)
+    before = compile_counters()
+    with jax.transfer_guard_host_to_device("disallow"):
+        for group in (tenants[:3], [tenants[1]], tenants, tenants[:2],
+                      [tenants[3]], tenants[:3]):
+            _round(svc, group, rng, seq, m_t)
+            seq += 1
+    assert compile_counters() - before == 0, \
+        "warm multi-tenant tick retraced a prediction program"
+
+
+def test_multi_tenant_matches_single_tenant_answers():
+    """The combined dispatch answers each tenant with the same E_S the
+    unfused single-tenant path computes from identical features (same
+    math at a wider batch shape -> allclose, not bitwise)."""
+    rng = np.random.default_rng(12)
+    svc = PredictionService(ServiceConfig(profile=profile()))
+    tenants = ["a", "b", "c"]
+    for t in tenants:
+        assert svc.hello(t, profile().to_wire())["ok"]
+    snaps = {t: (rand_mh(rng), rand_mt(rng)) for t in tenants}
+    ps = [svc.submit(t, mk_snap(t, 0, mh, mt))
+          for t, (mh, mt) in snaps.items()]
+    svc.tick()
+    for t, p in zip(tenants, ps):
+        m_h, m_t = snaps[t]
+        pred = StragglerPredictor(n_hosts=N_HOSTS, max_tasks=MAX_TASKS,
+                                  horizon=HORIZON)
+        seq = np.stack([m_h] * HORIZON)
+        ref = pred.predict_features(seq, m_t[None],
+                                    np.array([3.0], np.float32))
+        np.testing.assert_allclose(p.result["jobs"][0]["e_s"],
+                                   float(np.asarray(ref.e_s)[0]),
+                                   rtol=1e-5)
+
+
+# ------------------------ versioning / shadow eval -----------------------
+
+def test_version_store_promote_rollback_retention(tmp_path):
+    pred = StragglerPredictor(n_hosts=2, max_tasks=2)
+    store = VersionStore(str(tmp_path), keep=2)
+    store.save_version(0, pred.params)
+    store.promote(0)
+    for v in (1, 2):
+        store.save_version(v, pred.params)
+    store.promote(2)
+    for v in (3, 4):
+        store.save_version(v, pred.params)
+    # retention dropped 1 but pinned the promotion trail {0, 2}
+    assert 1 not in store.versions()
+    assert {0, 2}.issubset(store.versions())
+    assert store.current() == 2 and store.history() == [0]
+    assert store.rollback() == 0
+    assert store.current() == 0 and store.history() == []
+    assert store.rollback() is None
+    loaded = store.load_version(0, pred.params)
+    for a, b in zip(jax.tree_util.tree_leaves(loaded),
+                    jax.tree_util.tree_leaves(pred.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _drive_pairs(svc, client, rng, steps, start_seq=0):
+    """Stream snapshots whose done records fill the replay buffer."""
+    m_t = rand_mt(rng)
+    for i in range(steps):
+        done = ([{"id": start_seq + i - 1,
+                  "times": (1.0 + rng.random(3)).tolist()}]
+                if i or start_seq else [])
+        r = client.snapshot(mk_snap(client.tenant, start_seq + i,
+                                    rand_mh(rng), m_t,
+                                    job_id=start_seq + i, done=done))
+        assert r["ok"]
+
+
+def test_shadow_eval_blocks_bad_candidate_then_promotes_and_rolls_back(
+        tmp_path, monkeypatch):
+    """The acceptance criterion: a corrupted candidate is never
+    promoted (champion keeps serving, CURRENT unchanged); a good one is;
+    rollback restores the previous version bitwise."""
+    cfg = ServiceConfig(profile=profile(), ckpt_dir=str(tmp_path),
+                        min_train_pairs=6, eval_holdback=3,
+                        train_epochs=2, train_lr=1e-4)
+    svc = PredictionService(cfg)
+    c = LocalClient(svc, "t0")
+    assert c.hello(profile())["ok"]
+    rng = np.random.default_rng(13)
+    _drive_pairs(svc, c, rng, steps=10)
+    assert len(svc.buffer) >= cfg.min_train_pairs
+    v0_leaves = [np.asarray(jax.device_get(x))
+                 for x in jax.tree_util.tree_leaves(svc.params)]
+
+    real_fit = svc_retrain.fit_candidate
+    corrupt = {"on": True}
+
+    def maybe_corrupt(champion, tx, ty, epochs=1, lr=1e-4):
+        params, losses = real_fit(champion, tx, ty, epochs=1, lr=lr)
+        if corrupt["on"]:
+            params = jax.tree_util.tree_map(
+                lambda a: a * np.float32("nan"), params)
+        return params, losses
+
+    monkeypatch.setattr(svc_retrain, "fit_candidate", maybe_corrupt)
+    rej = c.retrain()
+    assert rej["ok"] and rej["promoted"] is False
+    assert not np.isfinite(rej["candidate_loss"])
+    assert svc.model_version == 0 and svc.store.current() == 0
+    assert svc.stats()["candidates_rejected"] == 1
+    # champion params untouched by the rejected candidate
+    for a, b in zip(jax.tree_util.tree_leaves(svc.params), v0_leaves):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+    corrupt["on"] = False
+    ok = c.retrain()
+    assert ok["promoted"] is True and ok["version"] == 1
+    assert svc.store.current() == 1 and svc.model_version == 1
+    assert np.isfinite(ok["candidate_loss"])
+    changed = any(
+        not np.array_equal(np.asarray(jax.device_get(a)), b)
+        for a, b in zip(jax.tree_util.tree_leaves(svc.params),
+                        v0_leaves))
+    assert changed, "promotion did not swap the serving params"
+    # every tenant predictor serves the promoted pytree
+    assert svc.tenants["t0"].predictor.params is svc.params
+
+    rb = c.rollback()
+    assert rb["ok"] and rb["version"] == 0
+    assert svc.store.current() == 0 and svc.model_version == 0
+    for a, b in zip(jax.tree_util.tree_leaves(svc.params), v0_leaves):
+        np.testing.assert_array_equal(np.asarray(jax.device_get(a)), b)
+
+
+def test_degraded_mode_when_model_fails_to_load(tmp_path):
+    """CURRENT pointing at a version that cannot load -> the service
+    still answers, from the jitted Pareto tail over the tenant's own
+    completed durations, flagged degraded."""
+    with open(os.path.join(str(tmp_path), "CURRENT"), "w") as f:
+        json.dump({"current": 7, "history": []}, f)
+    svc = PredictionService(ServiceConfig(profile=profile(),
+                                          ckpt_dir=str(tmp_path)))
+    assert svc.degraded
+    c = LocalClient(svc, "t0")
+    assert c.hello(profile())["ok"]
+    rng = np.random.default_rng(14)
+    m_t = rand_mt(rng)
+    r = c.snapshot(mk_snap(
+        "t0", 0, rand_mh(rng), m_t,
+        done=[{"id": 99, "times": [1.1, 1.4, 2.0, 5.0, 1.2, 1.3]}]))
+    assert r["ok"] and r["degraded"] is True
+    e_s = r["jobs"][0]["e_s"]
+    assert np.isfinite(e_s) and 0.0 <= e_s <= 3.0
+    assert svc.stats()["degraded_answers"] == 1
