@@ -2,8 +2,8 @@
 
 PY := python
 
-.PHONY: test test-all lint sweep-bench engine-bench bench regen-golden \
-	nightly-grid serve serve-bench
+.PHONY: test test-all lint sweep-bench engine-bench kernel-bench bench \
+	regen-golden nightly-grid serve serve-bench
 
 test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -19,6 +19,9 @@ sweep-bench:  ## serial vs cold/warm-pool sweep benchmark -> BENCH_sweep.json
 
 engine-bench:  ## single-cell (planetlab x start) benchmark -> BENCH_engine.json
 	PYTHONPATH=src $(PY) benchmarks/engine_bench.py
+
+kernel-bench:  ## fused Pallas LSTM cell fwd+VJP benchmark -> BENCH_kernel.json
+	PYTHONPATH=src $(PY) benchmarks/kernel_bench.py
 
 serve:  ## prediction-service demo: daemon + TCP tenants + retrain cycle
 	PYTHONPATH=src $(PY) examples/predict_service.py

@@ -25,13 +25,27 @@ treatment covers the serving daemon's ``BENCH_serve.json``: any
 answer-latency SLO plus p50/throughput are compared between matching
 hosts at matching sizing.
 
+The checker also knows the **Tier-1 determinism contract** (see
+tests/tolerance.py and README "Performance"): retrace checks stay hard,
+wall-clock predict-path numbers compare under ``--threshold`` as before,
+and the recorded fused-vs-unfused drift (``tier1_drift`` in
+``BENCH_engine.json``) is compared against the committed artifact — a
+non-gating warning fires when the drift trajectory *grows* (the hard
+``TIER1_REL`` gate lives in the test suite; this surfaces creep long
+before that gate would fail).
+
+With ``--history`` each run appends one JSON line (host, engine, serve
+and — via ``--kernel-fresh`` — Pallas-kernel numbers) to
+``BENCH_history.jsonl`` so the perf trajectory is visible across PRs.
+
 Always exits 0 — the lane's job is a visible warning on the PR, not a
 red build.
 
     python benchmarks/check_perf.py --baseline /tmp/BENCH_engine.base.json \
         --fresh BENCH_engine.json [--threshold 0.2] \
         [--serve-baseline /tmp/BENCH_serve.base.json \
-         --serve-fresh BENCH_serve.json]
+         --serve-fresh BENCH_serve.json] \
+        [--kernel-fresh BENCH_kernel.json] [--history BENCH_history.jsonl]
 """
 from __future__ import annotations
 
@@ -39,6 +53,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 
 def warn(msg: str) -> None:
@@ -117,6 +132,73 @@ def check_serve(baseline: str, fresh_path: str,
                   f"({ratio:.2f}x) ok")
 
 
+def check_tier1_drift(base: dict, fresh: dict) -> None:
+    """Non-gating drift-trajectory compare: warn when the recorded
+    fused-vs-unfused drift grew versus the committed artifact.  The
+    drift is deterministic per (platform, shape, unroll) — growth means
+    a rewrite moved the numerics, which must be a conscious re-bless of
+    the Tier-1 trajectory, never an accident."""
+    b, f_ = base.get("tier1_drift"), fresh.get("tier1_drift")
+    if not f_:
+        print("tier1_drift: not recorded in fresh bench; skipping")
+        return
+    bound = f_.get("bound_rel")
+    if f_.get("max_rel", 0.0) > (bound or float("inf")):
+        warn(f"tier1 drift max_rel {f_['max_rel']:.3e} EXCEEDS the "
+             f"documented bound {bound:.1e} — the test suite's hard "
+             f"gate will fail; the fused path no longer honors the "
+             f"Tier-1 contract")
+        return
+    if not b:
+        print("tier1_drift: no committed baseline to compare; "
+              f"fresh max_rel {f_.get('max_rel', 0.0):.3e} within "
+              f"bound {bound:.1e}")
+        return
+    grew = []
+    if f_.get("max_ulp", 0) > b.get("max_ulp", 0):
+        grew.append(f"max_ulp {b.get('max_ulp', 0)} -> {f_['max_ulp']}")
+    if f_.get("max_rel", 0.0) > b.get("max_rel", 0.0) * 1.5:
+        grew.append(f"max_rel {b.get('max_rel', 0.0):.3e} -> "
+                    f"{f_['max_rel']:.3e}")
+    if grew:
+        warn("tier1 drift trajectory grew vs committed baseline "
+             f"({'; '.join(grew)}; hosts {base.get('host')} -> "
+             f"{fresh.get('host')}): still within the documented bound "
+             f"({bound:.1e}), but drift growth should be a conscious "
+             f"re-bless, not a side effect")
+    else:
+        print(f"tier1_drift: max_rel {f_.get('max_rel', 0.0):.3e}, "
+              f"max_ulp {f_.get('max_ulp', 0)} — no growth vs committed "
+              f"baseline, within bound {bound:.1e}")
+
+
+def append_history(path: str, engine: dict | None, serve: dict | None,
+                   kernel: dict | None) -> None:
+    """Append this run's headline numbers as one JSON line — the
+    cross-PR perf trajectory (uploaded as a CI artifact)."""
+    entry = {"ts": round(time.time(), 1),
+             "sha": os.environ.get("GITHUB_SHA"),
+             "host": (engine or serve or kernel or {}).get("host")}
+    if engine:
+        entry["engine"] = {
+            k: engine.get(k) for k in
+            ("warm_wall_s", "predict_ms_per_interval",
+             "retraces_during_warm_cells", "n_hosts", "n_intervals",
+             "tier1_drift") if engine.get(k) is not None}
+    if serve:
+        entry["serve"] = {
+            k: serve.get(k) for k in
+            ("p50_ms", "p99_ms", "answers_per_s", "warm_retraces",
+             "tenants", "rounds") if serve.get(k) is not None}
+    if kernel:
+        entry["kernel"] = {k: kernel.get(k) for k in
+                           ("mode", "backend", "cells")
+                           if kernel.get(k) is not None}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"appended run to {path}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -127,6 +209,12 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-baseline", default=None,
                     help="committed BENCH_serve.json (pre-bench copy)")
     ap.add_argument("--serve-fresh", default="BENCH_serve.json")
+    ap.add_argument("--kernel-fresh", default=None,
+                    help="fresh BENCH_kernel.json (history/trajectory "
+                         "recording only)")
+    ap.add_argument("--history", default=None,
+                    help="append this run's numbers to this JSONL "
+                         "trajectory file")
     args = ap.parse_args(argv)
 
     if args.serve_baseline:
@@ -134,16 +222,31 @@ def main(argv=None) -> int:
                     args.threshold)
 
     base, fresh = _load_pair(args.baseline, args.fresh)
+
+    if args.history:
+        def _maybe(path):
+            if path and os.path.exists(path):
+                with open(path) as f:
+                    return json.load(f)
+            return None
+        # the fresh engine artifact records even with no baseline to
+        # compare against (first run on a new host)
+        append_history(args.history, fresh or _maybe(args.fresh),
+                       _maybe(args.serve_fresh),
+                       _maybe(args.kernel_fresh))
+
     if base is None:
         return 0
 
-    # machine-independent check first — it must run regardless of sizing
+    # machine-independent checks first — they run regardless of sizing
     rt = fresh.get("retraces_during_warm_cells")
     if rt:
         warn(f"retraces_during_warm_cells = {rt} (must be 0: a warm "
              f"sweep worker recompiled a prediction program)")
     else:
         print("retraces_during_warm_cells: 0 ok")
+
+    check_tier1_drift(base, fresh)
 
     if not _hosts_match(base, fresh, "engine"):
         return 0

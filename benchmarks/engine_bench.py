@@ -16,9 +16,13 @@ artifact to the repo root (``BENCH_engine.json``):
     (fused step + unfused network) must compile at most once per
     power-of-two job-batch bucket;
   * ``fused_step`` — whether the fused per-interval device program was
-    active (the default; ``--no-fused`` measures the historical path,
-    which is bitwise-identical but re-uploads the M_H history and pays
-    ~10 dispatches per interval);
+    active (the default; ``--no-fused`` measures the historical unfused
+    path — the Tier-0 bitwise reference, which re-uploads the M_H
+    history and pays extra dispatches per interval);
+  * ``tier1_drift`` — worst observed fused-vs-unfused drift across a
+    job-count sweep at this sizing, with the documented Tier-1 bound
+    (tests/tolerance.py) alongside — ``check_perf.py`` warns when the
+    drift trajectory grows versus the committed artifact;
   * speedups vs two baselines measured on the same container at their
     branch points: ``baseline_main`` (pre-vectorization mainline) and
     ``baseline_pr3`` (the PR 3/4 array-native path).  Committed-
@@ -41,6 +45,7 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from common import write_csv  # noqa: E402
 
+from repro.core import features  # noqa: E402
 from repro.core import predictor as P  # noqa: E402
 from repro.core import encoder_lstm as net  # noqa: E402
 from repro.sim import sweep  # noqa: E402
@@ -48,6 +53,8 @@ from repro.sim.engine import Simulation  # noqa: E402
 from repro.sim.sweep import SweepSpec  # noqa: E402
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "tests"))
+from tolerance import TIER1_MAX_ULP, TIER1_REL, drift  # noqa: E402
 
 # mainline (pre-array-native hot path) reference, measured on the CI
 # container with this exact sizing: per-task placement loop, dict job
@@ -72,6 +79,37 @@ def host_fingerprint() -> str:
 
 def _compiles() -> int:
     return net.predict_sequence._cache_size() + P.fused_compile_count()
+
+
+def measure_tier1_drift(n_hosts: int, max_tasks: int = 10,
+                        counts=(1, 2, 3, 5, 8, 9, 12, 16)) -> dict:
+    """Worst observed fused-vs-unfused drift across a job-count sweep at
+    the bench sizing — the Tier-1 determinism contract's trajectory
+    number.  Recorded in ``BENCH_engine.json`` so ``check_perf.py`` can
+    warn (non-gating) when a rewrite pushes the drift up, before the
+    hard TIER1_REL gate in the test suite ever fires."""
+    pred = P.StragglerPredictor(n_hosts=n_hosts, max_tasks=max_tasks)
+    rng = np.random.default_rng(0)
+    t = pred.horizon
+    rows = [rng.uniform(0, 1, (n_hosts, features.HOST_FEATURES))
+            .astype(np.float32) for _ in range(t)]
+    for r in rows:
+        pred.push_host_row(r)
+    worst = {"max_rel": 0.0, "max_abs": 0.0, "max_ulp": 0}
+    for n in counts:
+        m_t = rng.uniform(0, 1, (n, max_tasks, features.TASK_FEATURES)) \
+            .astype(np.float32)
+        q = rng.integers(1, max_tasks + 1, n).astype(np.float32)
+        got = pred.predict_interval(m_t, q)
+        ref = pred.predict_features(np.stack(rows[-t:]), m_t, q)
+        d = drift(got, np.asarray(ref.e_s))
+        for k in worst:
+            worst[k] = max(worst[k], d[k])
+        rows.append(rng.uniform(0, 1, (n_hosts, features.HOST_FEATURES))
+                    .astype(np.float32))
+        pred.push_host_row(rows[-1])
+    return {"bound_rel": TIER1_REL, "max_ulp_pin": TIER1_MAX_ULP,
+            "counts": list(counts), **worst}
 
 
 def bench_cell(n_hosts: int, n_intervals: int, fused: bool = True):
@@ -112,7 +150,10 @@ def bench_cell(n_hosts: int, n_intervals: int, fused: bool = True):
     warm_retraces = _compiles() - compiles_before - retraces
 
     buckets = sorted(tech._controller.predictor.buckets_used)
+    tier1 = measure_tier1_drift(
+        n_hosts, max_tasks=cfg.max_tasks) if fused else None
     return dict(
+        tier1_drift=tier1,
         bench="planetlab-x-start",
         host=host_fingerprint(),
         n_hosts=n_hosts, n_intervals=n_intervals, arrival_rate=0.6,

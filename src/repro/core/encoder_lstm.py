@@ -120,10 +120,12 @@ def init_state(params: Params, batch_shape: tuple = ()) -> LSTMState:
     return LSTMState(h=z, c=z)
 
 
-def step(params: Params, state: LSTMState, x: jax.Array,
-         use_pallas: bool = False) -> tuple[LSTMState, jax.Array]:
-    """One inference step: encoder -> stacked LSTM -> (alpha, beta) head."""
-    lam = encoder_apply(params, x)
+def step_decoded(params: Params, state: LSTMState, lam: jax.Array,
+                 use_pallas: bool = False) -> tuple[LSTMState, jax.Array]:
+    """LSTM + head over an already-encoded input (the recurrent half of
+    :func:`step`).  Factored out so Tier-1 callers can hoist the encoder
+    out of the scan entirely (:func:`decode_sequence`) — the op graph
+    here is byte-identical to the tail of the historical ``step``."""
     hs, cs = [], []
     inp = lam
     for li, layer in enumerate(params["lstm"]):
@@ -143,6 +145,13 @@ def step(params: Params, state: LSTMState, x: jax.Array,
     return new_state, jnp.stack([alpha, beta], axis=-1)
 
 
+def step(params: Params, state: LSTMState, x: jax.Array,
+         use_pallas: bool = False) -> tuple[LSTMState, jax.Array]:
+    """One inference step: encoder -> stacked LSTM -> (alpha, beta) head."""
+    return step_decoded(params, state, encoder_apply(params, x),
+                        use_pallas=use_pallas)
+
+
 def ema_smooth(seq: jax.Array, w: float = EMA_W) -> jax.Array:
     """Exponential moving average along axis 0 with weight w on the newest
     element (paper §3.2): s_t = w*x_t + (1-w)*s_{t-1}, s_0 = x_0."""
@@ -153,6 +162,85 @@ def ema_smooth(seq: jax.Array, w: float = EMA_W) -> jax.Array:
 
     _, out = jax.lax.scan(f, seq[0], seq)
     return out.at[0].set(seq[0])
+
+
+# --------------------------- Tier-1 fast path ------------------------------
+#
+# The functions below restructure the emission for speed and are governed
+# by the repo's Tier-1 determinism contract (documented relative/ulp
+# tolerance vs the bitwise reference path; see README "Performance" and
+# tests/tolerance.py).  ``predict_sequence`` below stays the bitwise
+# Tier-0-compatible reference — do not restructure it.
+
+
+def encoder_hoisted(params: Params, mh_ema: jax.Array,
+                    mt: jax.Array) -> jax.Array:
+    """Encoder over a (T, host_dim) shared host block + (nb, task_dim)
+    per-job task block, hoisted out of the recurrent scan.
+
+    Two restructurings relative to ``encoder_apply`` over the assembled
+    (T, nb, input_dim) batch, both Tier-1 (ulp-level drift, never
+    bitwise-pinned):
+
+      * the first layer's matmul is split at the host/task column
+        boundary — the shared host product ``mh_ema @ W[:host_dim]`` is
+        computed once per step instead of once per job (host_dim
+        dominates input_dim for real cluster sizes), and the task
+        product once per job instead of once per (step, job).  Summing
+        two partial dots changes the reduction order of the full-width
+        dot by a few ulps.
+      * ``mt`` is used raw instead of EMA-smoothed: the task block is
+        constant across the horizon, and the EMA of a constant sequence
+        is the constant itself (s_t = w*x + (1-w)*x = x, exactly in
+        real arithmetic, within 1 ulp in float32).
+
+    Returns the (T, nb, ENC_OUT) encodings for :func:`decode_sequence`.
+    """
+    l0 = params["enc"][0]
+    host_dim = mh_ema.shape[-1]
+    lam_h = mh_ema @ l0["w"][:host_dim]             # (T, E) — once per step
+    lam_t = mt @ l0["w"][host_dim:] + l0["b"]       # (nb, E) — once per job
+    h = jax.nn.softplus(lam_h[:, None, :] + lam_t[None, :, :])
+    for layer in params["enc"][1:]:
+        h = jax.nn.softplus(h @ layer["w"] + layer["b"])
+    return h
+
+
+def decode_sequence(params: Params, lam: jax.Array, unroll: int = 1,
+                    use_pallas: bool = False) -> jax.Array:
+    """Scan the LSTM + head over precomputed (T, ..., ENC_OUT) encodings.
+
+    ``unroll`` forwards to ``lax.scan`` — unrolling the (tiny, typically
+    T=5) emission loop lets XLA fuse across steps instead of paying the
+    while-loop machinery per step.  Different unroll factors compile
+    different fusions whose rounding may differ by ulps: Tier-1.
+    Callers embed this in their own jitted programs (it is not jitted
+    here), so each (shape, unroll) pair is one cache entry there.
+    """
+    state = init_state(params, lam.shape[1:-1])
+
+    def f(state, x):
+        return step_decoded(params, state, x, use_pallas=use_pallas)
+
+    _, outs = jax.lax.scan(f, state, lam, unroll=unroll)
+    return outs[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("unroll", "use_pallas"))
+def predict_sequence_opt(params: Params, xs: jax.Array, unroll: int = 1,
+                         use_pallas: bool = False) -> jax.Array:
+    """Tier-1 twin of :func:`predict_sequence` for callers whose host
+    blocks vary per row (the multi-tenant serving batch): the encoder
+    runs batched over the whole (T, nb) grid — one matmul chain instead
+    of one per scan step — and the LSTM scan unrolls.  No host/task
+    split (rows carry different host blocks), so the only drift sources
+    are batched-encoder fusion and ``unroll``."""
+    xs = ema_smooth(xs)
+    lam = xs
+    for layer in params["enc"]:
+        lam = jax.nn.softplus(lam @ layer["w"] + layer["b"])
+    return decode_sequence(params, lam, unroll=unroll,
+                           use_pallas=use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -32,6 +32,12 @@ class Policy:
 
     name = "policy"
 
+    #: Set False on policies that never act at submit time: the simulator
+    #: then skips building the EVENT_SUBMIT view (and the decide call)
+    #: entirely — the view is pure and an ignoring decide() is pure, so
+    #: skipping is behavior-preserving and saves per-interval overhead.
+    submit_hook = True
+
     def observe(self, view: "TelemetryView") -> None:
         """Ingest one interval/step of telemetry."""
 

@@ -64,6 +64,13 @@ class ServiceConfig:
     train_epochs: int = 20
     train_lr: float = 1e-4
     retrain_every: int = 0       # snapshots between auto retrains (0=off)
+    #: cron-style wall-clock retrain period in seconds (0 = off): the
+    #: daemon's scheduler thread flags a retrain due every
+    #: ``retrain_interval_s`` of *monotonic* time even when snapshot
+    #: volume alone would never reach ``retrain_every`` — slow tenants
+    #: still get periodically refreshed models.  Missed periods (e.g. a
+    #: long fit) coalesce into one firing, never a backlog burst.
+    retrain_interval_s: float = 0.0
     seed: int = 0
     use_pallas: bool = False
 

@@ -10,7 +10,10 @@
     in order on that connection;
   * an optional **retrain** thread that runs a
     retrain/shadow-eval/promote cycle whenever the service flags one due
-    (``retrain_every`` snapshots).
+    (``retrain_every`` snapshots) or the cron-style wall-clock scheduler
+    (:class:`RetrainScheduler`, ``retrain_interval_s`` seconds of
+    monotonic time) fires — slow tenants still get periodically
+    refreshed models.
 
 ``LocalClient`` drives the same service in-process with zero transport
 (the simulator / tests path); ``ServiceClient`` is the TCP twin with an
@@ -21,9 +24,45 @@ from __future__ import annotations
 import socket
 import socketserver
 import threading
+import time
 
 from repro.service import protocol
 from repro.service.core import PredictionService, ServiceConfig
+
+
+class RetrainScheduler:
+    """Cron-style wall-clock retrain trigger.
+
+    Marks a retrain due every ``interval_s`` seconds of **monotonic**
+    time (never the wall calendar — NTP steps and suspend/resume must
+    not double- or never-fire).  Missed periods coalesce: if a slow fit
+    (or a suspended laptop) swallows three periods, the next
+    :meth:`due` poll fires once and re-arms ``interval_s`` from *now*,
+    so there is never a catch-up burst of back-to-back retrains.
+
+    The clock is injectable so tests drive it deterministically with a
+    fake; production uses :func:`time.monotonic`.
+    """
+
+    def __init__(self, interval_s: float, clock=time.monotonic):
+        self.interval_s = float(interval_s)
+        self.clock = clock
+        self._next = (self.clock() + self.interval_s
+                      if self.interval_s > 0 else None)
+
+    @property
+    def enabled(self) -> bool:
+        return self._next is not None
+
+    def due(self) -> bool:
+        """Poll: True exactly once per elapsed period, then re-arm."""
+        if self._next is None:
+            return False
+        now = self.clock()
+        if now < self._next:
+            return False
+        self._next = now + self.interval_s
+        return True
 
 
 class _Handler(socketserver.StreamRequestHandler):
@@ -62,12 +101,17 @@ class ServiceDaemon:
             TCP listener (in-process only).
         batch_window: seconds the batch worker waits for more tenants
             before dispatching a tick.
+        retrain_clock: monotonic clock the wall-clock retrain scheduler
+            reads (tests inject a fake; ``None`` = ``time.monotonic``).
     """
 
     def __init__(self, cfg: ServiceConfig, host: str = "127.0.0.1",
                  port: int | None = 0, batch_window: float = 0.002,
-                 timeout_s: float = 30.0):
+                 timeout_s: float = 30.0, retrain_clock=None):
         self.service = PredictionService(cfg)
+        self.retrain_scheduler = RetrainScheduler(
+            getattr(cfg, "retrain_interval_s", 0.0),
+            clock=retrain_clock or time.monotonic)
         self.batch_window = batch_window
         self._stop = threading.Event()
         self._kick = threading.Event()
@@ -141,6 +185,12 @@ class ServiceDaemon:
 
     def _run_retrainer(self) -> None:
         while not self._stop.wait(0.05):
+            # the wall-clock scheduler latches the same due-flag the
+            # snapshot-count trigger uses, so both routes share one
+            # retrain/shadow-eval/promote pipeline (and its guards:
+            # min_train_pairs, eval holdback, promotion tolerance)
+            if self.retrain_scheduler.due():
+                self.service._retrain_due = True
             if self.service._retrain_due:
                 try:
                     self.service.retrain_now()

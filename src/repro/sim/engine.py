@@ -319,11 +319,14 @@ class Simulation:
             self.jobs.add_batch(new_idx[firsts], counts,
                                 batch.is_deadline[firsts])
 
-        # 2. policy submit-time decision point (clone / delay)
+        # 2. policy submit-time decision point (clone / delay) — skipped
+        # for policies that declare submit_hook=False (the view and an
+        # ignoring decide() are both pure, so this is behavior-preserving)
         t0 = _time.perf_counter()
-        for act in self.technique.decide(self.snapshot(EVENT_SUBMIT,
-                                                       new_idx)):
-            self._apply(act)
+        if getattr(self.technique, "submit_hook", True):
+            for act in self.technique.decide(self.snapshot(EVENT_SUBMIT,
+                                                           new_idx)):
+                self._apply(act)
         submit_overhead = _time.perf_counter() - t0
 
         # 3. schedule pending tasks whose delay has expired — one

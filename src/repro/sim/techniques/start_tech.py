@@ -98,6 +98,9 @@ class START(Policy):
     """
 
     name = "start"
+    # START only acts at interval decision points (decide() filters on
+    # EVENT_INTERVAL) — let the engine skip the submit-time view+call
+    submit_hook = False
 
     def __init__(self, controller: STARTController | None = None,
                  seed: int = 0, margin: float | None = None,

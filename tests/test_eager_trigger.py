@@ -2,8 +2,10 @@
 
 Pins the PR's contracts:
 
-  * the predictor's per-task score head is bitwise-equal between the
-    fused device step and the historical unfused path, per batch shape,
+  * the predictor's per-task score head agrees between the fused device
+    step and the historical unfused path within the Tier-1 tolerance
+    bound (tests/tolerance.py) at every batch shape — the fused program
+    restructures the emission, so cross-path equality is toleranced —
     and scores decompose the job-level E_S exactly;
   * with the per-task head enabled the fused warm path still performs
     zero XLA retraces and zero host->device transfers beyond its single
@@ -35,6 +37,8 @@ from repro.sim.sweep import SweepSpec
 from repro.sim.techniques.start_tech import START, STARTEager, pretrain
 from repro.sim import sweep
 
+from tolerance import assert_tier1
+
 jax.config.update("jax_platform_name", "cpu")
 
 OVERLOAD = dict(scenarios=("overload",), n_hosts=16, n_intervals=40,
@@ -55,8 +59,8 @@ def overload_ctrl_bytes():
 # ----------------------- per-task score head: equality ----------------------
 
 def test_per_task_scores_fused_equals_unfused_per_shape():
-    """(e_s, scores) must be bitwise-identical between the fused device
-    step and the unfused path across batch shapes, including idle
+    """(e_s, scores) must agree within the Tier-1 bound between the fused
+    device step and the unfused path across batch shapes, including idle
     intervals (observe without predict)."""
     rng = np.random.default_rng(0)
     n_hosts, max_tasks = 6, 5
@@ -79,10 +83,8 @@ def test_per_task_scores_fused_equals_unfused_per_shape():
         want_es, want_s = pred_u.predict_features(
             np.stack(seq), m_t, q, per_task=True)
         got_es, got_s = pred_f.predict_interval(m_t, q, per_task=True)
-        np.testing.assert_array_equal(got_es, want_es,
-                                      err_msg=f"e_s step {step}")
-        np.testing.assert_array_equal(got_s, want_s,
-                                      err_msg=f"scores step {step}")
+        assert_tier1(got_es, want_es, context=f"e_s step {step}")
+        assert_tier1(got_s, want_s, context=f"scores step {step}")
         assert got_s.shape == (n, max_tasks)
 
 

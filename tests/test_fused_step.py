@@ -1,13 +1,17 @@
 """Fused per-interval decision step + sweep scheduling tests.
 
-Pins the PR's two contracts:
+Pins the fused path's contracts under the tiered determinism model:
 
   * the fused device program (ring-buffer M_H history + on-device feature
-    assembly + Encoder-LSTM + Pareto tail in one donated-buffer jit) is
-    **bitwise-equal** to the historical unfused path on a full
-    planetlab x start cell, and a warm interval performs **zero XLA
-    retraces and zero host->device transfers** beyond its single staged
-    upload;
+    assembly + hoisted-encoder Encoder-LSTM + in-program Pareto tail in
+    one donated-buffer jit) is **Tier-1**: it agrees with the unfused
+    Tier-0 reference within the documented tolerance bound
+    (tests/tolerance.py) at every batch shape, and is itself fully
+    deterministic — a full planetlab x start cell reproduces bitwise
+    across runs and across pickling;
+  * a warm interval performs **zero XLA retraces and zero host->device
+    transfers** beyond its single staged upload (that guarantee is hard,
+    not toleranced);
   * the sweep's parent-pretrain broadcast and the parent-participating
     scheduler preserve serial == parallel bitwise while removing the
     per-worker duplicate pretraining.
@@ -26,6 +30,8 @@ from repro.core.start import STARTController
 from repro.sim import sweep
 from repro.sim.engine import Simulation
 from repro.sim.sweep import SweepSpec, deterministic_summary
+
+from tolerance import assert_tier1
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -46,32 +52,40 @@ def trained_start_bytes():
         sweep.make_technique("start", cfg, pretrain_epochs=2)), cfg
 
 
-# ------------------------- fused == unfused bitwise -------------------------
+# ---------------------- fused == unfused within Tier-1 ----------------------
 
-def test_fused_step_bitwise_equals_unfused_on_full_cell(trained_start_bytes):
-    """The whole planetlab x start cell must be bitwise-identical whether
-    the per-interval pipeline runs fused on device or through the
-    historical host-assembled path."""
+def test_fused_cell_is_deterministic_across_runs(trained_start_bytes):
+    """Tier-1 relaxes cross-path bitwise equality, NOT determinism: the
+    whole planetlab x start cell must reproduce bitwise when the fused
+    pipeline runs twice from the same pretrained bytes."""
     tech_bytes, cfg = trained_start_bytes
-    unfused = pickle.loads(tech_bytes)
-    unfused.use_fused_step = False      # forwards to the controller
-    assert not unfused._controller.use_fused_step
-    s_unfused = Simulation(cfg, technique=unfused).run()
+    a = pickle.loads(tech_bytes)
+    assert a._controller.use_fused_step   # the default
+    s_a = Simulation(cfg, technique=a).run()
+    b = pickle.loads(tech_bytes)
+    s_b = Simulation(cfg, technique=b).run()
 
-    fused = pickle.loads(tech_bytes)
-    assert fused._controller.use_fused_step   # the default
-    s_fused = Simulation(cfg, technique=fused).run()
-
-    assert deterministic_summary(s_fused) == deterministic_summary(s_unfused)
+    assert deterministic_summary(s_a) == deterministic_summary(s_b)
     # and the fused path actually ran: one staged upload per predicted
     # interval, nothing else
-    pred = fused._controller.predictor
+    pred = a._controller.predictor
     assert pred.h2d_stages > 0
+    # the unfused route still works end to end (service degraded mode,
+    # cold second-predicts) — no equality demanded at cell granularity:
+    # per-interval ulp drift compounds through placement decisions
+    c = pickle.loads(tech_bytes)
+    c.use_fused_step = False      # forwards to the controller
+    assert not c._controller.use_fused_step
+    s_c = Simulation(cfg, technique=c).run()
+    assert deterministic_summary(s_c)["tasks_total"] > 0
 
 
 def test_fused_predict_interval_matches_predict_features():
-    """Direct predictor-level equivalence across batch sizes, including
-    the idle-interval catch-up roll (observe without predict)."""
+    """Direct predictor-level equivalence across batch sizes within the
+    Tier-1 bound, including the idle-interval catch-up roll (observe
+    without predict).  The fused program restructures the emission
+    (hoisted split encoder, unrolled scan, in-program Pareto tail, exact
+    shapes for counts 5 and 9), so agreement is toleranced, not bitwise."""
     rng = np.random.default_rng(0)
     n_hosts, max_tasks = 6, 5
     pred_f = StragglerPredictor(n_hosts=n_hosts, max_tasks=max_tasks)
@@ -95,7 +109,7 @@ def test_fused_predict_interval_matches_predict_features():
         want = np.asarray(
             pred_u.predict_features(np.stack(seq), m_t, q).e_s)
         got = pred_f.predict_interval(m_t, q)
-        np.testing.assert_array_equal(got, want, err_msg=f"step {step}")
+        assert_tier1(got, want, context=f"step {step}")
 
 
 def test_fused_predictor_survives_pickling_mid_run():

@@ -212,6 +212,44 @@ def test_bucket_size():
         == [1, 1, 2, 4, 4, 8, 8, 16, 32]
 
 
+def test_batch_size_exact_shape_policy_and_budget():
+    """The Tier-1 exact-shape policy: counts whose power-of-two bucket
+    wastes more than ``exact_shape_waste`` run at their exact width, up
+    to ``exact_shape_budget`` distinct shapes; decisions replay
+    deterministically and the budget bounds the steady-state compile
+    count of a long-lived process."""
+    pred = StragglerPredictor(n_hosts=3, max_tasks=4)
+    assert pred.batch_size(3) == 4    # waste 1/4 == threshold: pads
+    assert pred.batch_size(6) == 8    # waste 2/8 == threshold: pads
+    assert pred.batch_size(5) == 5    # waste 3/8 > threshold: exact
+    assert pred.batch_size(9) == 9    # waste 7/16: exact
+    assert pred.batch_size(8) == 8    # exact power of two: unchanged
+    assert pred.batch_size(5) == 5    # replay is deterministic
+
+    tight = StragglerPredictor(n_hosts=3, max_tasks=4,
+                               exact_shape_budget=2)
+    assert tight.batch_size(5) == 5
+    assert tight.batch_size(9) == 9
+    assert tight.batch_size(17) == 32   # budget spent: new counts pad
+    assert tight.batch_size(5) == 5     # seen exact shapes stay exact
+
+    off = StragglerPredictor(n_hosts=3, max_tasks=4,
+                             exact_shape_waste=1.0)
+    assert off.batch_size(5) == 8       # policy disabled: pure po2
+
+    # the Tier-0 reference path is NOT subject to the policy: its batch
+    # shaping stays pure power-of-two bucketing (bucket_size above)
+    rng = np.random.default_rng(0)
+    mh = rng.uniform(0, 1, (5, 3, features.HOST_FEATURES)) \
+        .astype(np.float32)
+    mt = rng.uniform(0, 1, (5, 4, features.TASK_FEATURES)) \
+        .astype(np.float32)
+    off2 = StragglerPredictor(n_hosts=3, max_tasks=4)
+    out = off2.predict_features(mh, mt, np.full(5, 4.0, np.float32))
+    assert out.e_s.shape == (5,)
+    assert off2.buckets_used == {8}     # padded, not exact
+
+
 def test_start_cell_run_stays_within_bucket_compiles():
     """End to end: a multi-interval START run retraces at most once per
     bucket the run actually used."""

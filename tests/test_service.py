@@ -435,3 +435,63 @@ def test_degraded_mode_when_model_fails_to_load(tmp_path):
     e_s = r["jobs"][0]["e_s"]
     assert np.isfinite(e_s) and 0.0 <= e_s <= 3.0
     assert svc.stats()["degraded_answers"] == 1
+
+
+# --------------------- wall-clock retrain scheduling ---------------------
+
+def test_retrain_scheduler_fires_per_period_and_coalesces():
+    """The monotonic scheduler fires exactly once per elapsed period,
+    re-arms from *now* (missed periods coalesce into one firing, never a
+    catch-up burst), and 0 disables it."""
+    from repro.service.daemon import RetrainScheduler
+    t = {"now": 100.0}
+    s = RetrainScheduler(10.0, clock=lambda: t["now"])
+    assert s.enabled
+    assert not s.due()                 # nothing elapsed
+    t["now"] = 109.9
+    assert not s.due()
+    t["now"] = 110.0
+    assert s.due()                     # one period elapsed
+    assert not s.due()                 # latched: fired once, re-armed
+    t["now"] = 145.0                   # 3.5 periods swallowed
+    assert s.due()                     # single coalesced firing
+    assert not s.due()
+    t["now"] = 154.9
+    assert not s.due()                 # re-armed from 145, not from 110
+    t["now"] = 155.0
+    assert s.due()
+
+    off = RetrainScheduler(0.0, clock=lambda: t["now"])
+    assert not off.enabled
+    assert not off.due()
+
+
+def test_wall_clock_retrain_trigger_end_to_end(tmp_path):
+    """A daemon with ``retrain_interval_s`` set (and the snapshot-count
+    trigger OFF) retrains and promotes when the injected monotonic clock
+    crosses the period — and not before."""
+    import time as _time
+    t = {"now": 0.0}
+    cfg = ServiceConfig(profile=profile(), ckpt_dir=str(tmp_path),
+                        min_train_pairs=6, eval_holdback=3,
+                        train_epochs=2, train_lr=1e-4,
+                        retrain_every=0, retrain_interval_s=30.0)
+    with ServiceDaemon(cfg, port=None,
+                       retrain_clock=lambda: t["now"]) as d:
+        svc = d.service
+        assert d.retrain_scheduler.enabled
+        c = LocalClient(svc, "t0")
+        assert c.hello(profile())["ok"]
+        rng = np.random.default_rng(21)
+        _drive_pairs(svc, c, rng, steps=10)
+        assert len(svc.buffer) >= cfg.min_train_pairs
+        # clock has not advanced: the retrainer thread polls but must
+        # not fire (snapshot trigger is off and the period is untouched)
+        _time.sleep(0.3)
+        assert svc.stats()["retrains"] == 0 and svc.model_version == 0
+        t["now"] = 31.0                # cross the period on the fake clock
+        deadline = _time.monotonic() + 10.0
+        while svc.model_version == 0 and _time.monotonic() < deadline:
+            _time.sleep(0.05)
+        assert svc.stats()["retrains"] >= 1
+        assert svc.model_version == 1, "wall-clock trigger never promoted"
