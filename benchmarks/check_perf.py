@@ -34,12 +34,21 @@ non-gating warning fires when the drift trajectory *grows* (the hard
 ``TIER1_REL`` gate lives in the test suite; this surfaces creep long
 before that gate would fail).
 
-With ``--history`` each run appends one JSON line (host, engine, serve
-and — via ``--kernel-fresh`` — Pallas-kernel numbers) to
+When ``--sweep-baseline`` / ``--sweep-fresh`` are given, the sweep
+subsystem's ``BENCH_sweep.json`` gets the same treatment:
+``bitwise_equal: false`` (or ``fabric_bitwise_equal: false``) is a
+**hard failure** — the checker exits nonzero, because a parallel or
+fabric grid diverging from serial breaks the Tier-0 determinism
+contract, never a "noisy runner" — while ``speedup_warm`` /
+``fabric_speedup_warm`` regressions beyond the threshold emit the usual
+non-gating warnings, keyed on matching host fingerprints.
+
+With ``--history`` each run appends one JSON line (host, engine, serve,
+sweep/fabric and — via ``--kernel-fresh`` — Pallas-kernel numbers) to
 ``BENCH_history.jsonl`` so the perf trajectory is visible across PRs.
 
-Always exits 0 — the lane's job is a visible warning on the PR, not a
-red build.
+Exits 0 unless a determinism contract broke (sweep bitwise mismatch) —
+wall-clock regressions stay visible warnings on the PR, not red builds.
 
     python benchmarks/check_perf.py --baseline /tmp/BENCH_engine.base.json \
         --fresh BENCH_engine.json [--threshold 0.2] \
@@ -132,6 +141,59 @@ def check_serve(baseline: str, fresh_path: str,
                   f"({ratio:.2f}x) ok")
 
 
+def fail(msg: str) -> None:
+    # GitHub Actions error annotation; unlike warn() this gates the lane
+    print(f"::error title=perf-smoke::{msg}")
+    print(msg, file=sys.stderr)
+
+
+def check_sweep(baseline: str, fresh_path: str, threshold: float) -> int:
+    """Sweep/fabric trajectory.  Returns the number of HARD failures:
+    a bitwise mismatch between serial and parallel/fabric grids is a
+    broken determinism contract (machine-independent, gates the lane);
+    throughput regressions are non-gating warnings between matching
+    hosts at matching grid sizing."""
+    hard = 0
+    if not os.path.exists(fresh_path):
+        print(f"no fresh sweep bench at {fresh_path}; skipping")
+        return 0
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    for key in ("bitwise_equal", "fabric_bitwise_equal"):
+        v = fresh.get(key)
+        if v is False:
+            fail(f"sweep {key} is FALSE: a "
+                 f"{'fabric' if 'fabric' in key else 'parallel'} grid "
+                 f"diverged from serial — the Tier-0 determinism "
+                 f"contract is broken, not a perf blip")
+            hard += 1
+        elif v:
+            print(f"sweep {key}: true ok")
+
+    base, fresh = _load_pair(baseline, fresh_path)
+    if base is None:
+        return hard
+    if not _hosts_match(base, fresh, "sweep"):
+        return hard
+    sizing = ("cells", "workers", "fabric_nodes")
+    if any(base.get(k) != fresh.get(k) for k in sizing):
+        print("sweep baseline and fresh bench use different grid "
+              "sizings; skipping the speedup comparison")
+        return hard
+    for key in ("speedup_warm", "fabric_speedup_warm"):
+        b, f_ = base.get(key), fresh.get(key)
+        if not b or not f_:
+            continue
+        ratio = b / f_   # higher is better
+        if ratio > 1.0 + threshold:
+            warn(f"sweep {key} regressed {ratio:.2f}x vs committed "
+                 f"baseline ({b} -> {f_})")
+        else:
+            print(f"sweep {key}: {b} -> {f_} ({ratio:.2f}x) ok")
+    return hard
+
+
 def check_tier1_drift(base: dict, fresh: dict) -> None:
     """Non-gating drift-trajectory compare: warn when the recorded
     fused-vs-unfused drift grew versus the committed artifact.  The
@@ -173,12 +235,13 @@ def check_tier1_drift(base: dict, fresh: dict) -> None:
 
 
 def append_history(path: str, engine: dict | None, serve: dict | None,
-                   kernel: dict | None) -> None:
+                   kernel: dict | None,
+                   sweep: dict | None = None) -> None:
     """Append this run's headline numbers as one JSON line — the
     cross-PR perf trajectory (uploaded as a CI artifact)."""
     entry = {"ts": round(time.time(), 1),
              "sha": os.environ.get("GITHUB_SHA"),
-             "host": (engine or serve or kernel or {}).get("host")}
+             "host": (engine or serve or sweep or kernel or {}).get("host")}
     if engine:
         entry["engine"] = {
             k: engine.get(k) for k in
@@ -194,6 +257,13 @@ def append_history(path: str, engine: dict | None, serve: dict | None,
         entry["kernel"] = {k: kernel.get(k) for k in
                            ("mode", "backend", "cells")
                            if kernel.get(k) is not None}
+    if sweep:
+        entry["sweep"] = {
+            k: sweep.get(k) for k in
+            ("cells", "workers", "serial_wall_s", "parallel_warm_wall_s",
+             "speedup", "speedup_warm", "bitwise_equal", "fabric_nodes",
+             "fabric_wall_s", "fabric_warm_wall_s", "fabric_speedup_warm",
+             "fabric_bitwise_equal") if sweep.get(k) is not None}
     with open(path, "a") as f:
         f.write(json.dumps(entry, sort_keys=True) + "\n")
     print(f"appended run to {path}")
@@ -212,6 +282,9 @@ def main(argv=None) -> int:
     ap.add_argument("--kernel-fresh", default=None,
                     help="fresh BENCH_kernel.json (history/trajectory "
                          "recording only)")
+    ap.add_argument("--sweep-baseline", default=None,
+                    help="committed BENCH_sweep.json (pre-bench copy)")
+    ap.add_argument("--sweep-fresh", default="BENCH_sweep.json")
     ap.add_argument("--history", default=None,
                     help="append this run's numbers to this JSONL "
                          "trajectory file")
@@ -220,6 +293,11 @@ def main(argv=None) -> int:
     if args.serve_baseline:
         check_serve(args.serve_baseline, args.serve_fresh,
                     args.threshold)
+
+    hard_failures = 0
+    if args.sweep_baseline:
+        hard_failures += check_sweep(args.sweep_baseline,
+                                     args.sweep_fresh, args.threshold)
 
     base, fresh = _load_pair(args.baseline, args.fresh)
 
@@ -233,10 +311,12 @@ def main(argv=None) -> int:
         # compare against (first run on a new host)
         append_history(args.history, fresh or _maybe(args.fresh),
                        _maybe(args.serve_fresh),
-                       _maybe(args.kernel_fresh))
+                       _maybe(args.kernel_fresh),
+                       sweep=_maybe(args.sweep_fresh)
+                       if args.sweep_baseline else None)
 
     if base is None:
-        return 0
+        return hard_failures
 
     # machine-independent checks first — they run regardless of sizing
     rt = fresh.get("retraces_during_warm_cells")
@@ -249,13 +329,13 @@ def main(argv=None) -> int:
     check_tier1_drift(base, fresh)
 
     if not _hosts_match(base, fresh, "engine"):
-        return 0
+        return hard_failures
 
     if (base.get("n_hosts"), base.get("n_intervals")) != \
             (fresh.get("n_hosts"), fresh.get("n_intervals")):
         print("baseline and fresh bench use different cell sizings; "
               "skipping wall-clock comparison")
-        return 0
+        return hard_failures
 
     checked = 0
     for key in ("warm_wall_s", "predict_ms_per_interval"):
@@ -270,7 +350,7 @@ def main(argv=None) -> int:
         else:
             print(f"{key}: {b} -> {f_} ({ratio:.2f}x) ok")
     print(f"checked {checked} wall metrics against {args.baseline}")
-    return 0
+    return hard_failures
 
 
 if __name__ == "__main__":

@@ -3,10 +3,19 @@ from __future__ import annotations
 
 import csv
 import os
+import platform
 import time
 
 ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "artifacts")
+
+
+def host_fingerprint() -> str:
+    """Coarse hardware identity for the perf artifacts: wall-clock
+    numbers are only comparable between benches run on matching
+    fingerprints (``check_perf.py`` skips the regression compare on
+    mismatch)."""
+    return f"{platform.machine()}-{os.cpu_count()}cpu-{platform.system()}"
 
 
 def write_csv(name: str, header: list[str], rows: list[list]) -> str:

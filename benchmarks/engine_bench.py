@@ -36,14 +36,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 import sys
 import time
 
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-from common import write_csv  # noqa: E402
+from common import host_fingerprint, write_csv  # noqa: E402
 
 from repro.core import features  # noqa: E402
 from repro.core import predictor as P  # noqa: E402
@@ -68,13 +67,6 @@ BASELINE_MAIN = {"cold_wall_s": 3.978, "warm_wall_s": 0.561}
 BASELINE_PR3 = {"warm_wall_s": 0.149, "predict_ms_per_interval": 1.681,
                 "committed": {"cold_wall_s": 2.061, "warm_wall_s": 0.168,
                               "predict_ms_per_interval": 2.091}}
-
-
-def host_fingerprint() -> str:
-    """Coarse hardware identity for the perf artifact: wall-clock numbers
-    are only comparable between benches run on matching fingerprints
-    (``check_perf.py`` skips the regression compare on mismatch)."""
-    return f"{platform.machine()}-{os.cpu_count()}cpu-{platform.system()}"
 
 
 def _compiles() -> int:

@@ -23,9 +23,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 import sys
 import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import host_fingerprint  # noqa: E402
 
 import jax
 import jax.numpy as jnp
@@ -94,12 +96,6 @@ def rows() -> list[list]:
 
 
 # ------------------- fused Pallas LSTM cell -> BENCH_kernel.json ------------
-
-
-def host_fingerprint() -> str:
-    """Coarse hardware identity (same scheme as ``engine_bench.py``):
-    wall-clock numbers are only comparable between matching hosts."""
-    return f"{platform.machine()}-{os.cpu_count()}cpu-{platform.system()}"
 
 
 def _median_us(fn, *args, repeats: int = 20) -> float:

@@ -27,7 +27,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 import sys
 import threading
 import time
@@ -35,7 +34,7 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-from common import write_csv  # noqa: E402
+from common import host_fingerprint, write_csv  # noqa: E402
 
 from repro.core import encoder_lstm as net  # noqa: E402
 from repro.core import features  # noqa: E402
@@ -45,10 +44,6 @@ from repro.service import (Profile, ServiceConfig,  # noqa: E402
                            ServiceDaemon)
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def host_fingerprint() -> str:
-    return f"{platform.machine()}-{os.cpu_count()}cpu-{platform.system()}"
 
 
 def _compiles() -> int:

@@ -25,10 +25,20 @@ duplicate pretraining):
   * ``per_cell_warm_s``      — mean/p95 per-cell wall inside the warm
     parallel run.
 
+With ``--fabric-nodes N`` (default 2; 0 disables) the same grid also
+runs over the **distributed sweep fabric** on localhost: a
+``FabricCoordinator`` in this process serves units to N spawned node
+agents over TCP, twice (``fabric_wall_s`` — fresh agents, cold caches —
+then ``fabric_warm_wall_s``), and the fabric cells are asserted
+bitwise-equal to serial too (``fabric_bitwise_equal``).  On a 1-cpu
+container this measures fabric *overhead*, not speedup — the numbers
+exist so a real multi-host run has a committed localhost reference.
+
 Serial and parallel cell summaries are asserted bitwise-equal.  Host
-context (``host_cpus``, ``lanes``) is recorded because the attainable
-speedup at W workers is capped by physical cores — the scheduler adds
-the parent as an extra lane only when cores exceed workers.
+context (``host``, ``host_cpus``, ``lanes``) is recorded because the
+attainable speedup at W workers is capped by physical cores — the
+scheduler adds the parent as an extra lane only when cores exceed
+workers, and ``check_perf.py`` only compares matching fingerprints.
 
     PYTHONPATH=src python benchmarks/sweep_bench.py [--quick] [--workers N]
 """
@@ -37,6 +47,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import multiprocessing
 import os
 import sys
 import time
@@ -44,9 +55,10 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-from common import write_csv  # noqa: E402
+from common import host_fingerprint, write_csv  # noqa: E402
 
 from repro.sim import scenarios, sweep  # noqa: E402
+from repro.sim.fabric import FabricCoordinator, worker_main  # noqa: E402
 from repro.sim.sweep import SweepSpec, deterministic_summary, run  # noqa: E402
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -69,11 +81,50 @@ def bench_spec(quick: bool) -> SweepSpec:
     )
 
 
+def bench_fabric(spec: SweepSpec, serial, n_nodes: int) -> dict:
+    """Run the grid over a localhost fabric (coordinator here, ``n_nodes``
+    spawned node agents), twice: fresh agents pay jax import + compiles
+    in the first grid, the second is the steady state."""
+    ctx = multiprocessing.get_context("spawn")
+    with FabricCoordinator(lease_s=120.0) as coord:
+        procs = [ctx.Process(target=worker_main,
+                             args=(coord.host, coord.port),
+                             kwargs=dict(node=f"bench-node{i}", lanes=1,
+                                         exit_on_drain=False),
+                             daemon=True)
+                 for i in range(n_nodes)]
+        for p in procs:
+            p.start()
+        try:
+            first = run(spec, fabric=coord)
+            warm = run(spec, fabric=coord)
+        finally:
+            for p in procs:
+                p.terminate()
+            for p in procs:
+                p.join(timeout=10)
+    equal = all(deterministic_summary(a.summary)
+                == deterministic_summary(b.summary)
+                for res in (first, warm)
+                for a, b in zip(serial.cells, res.cells))
+    return {
+        "fabric_nodes": n_nodes,
+        "fabric_wall_s": round(first.wall_s, 3),
+        "fabric_warm_wall_s": round(warm.wall_s, 3),
+        "fabric_speedup_warm": round(
+            serial.wall_s / max(warm.wall_s, 1e-9), 2),
+        "fabric_bitwise_equal": bool(equal),
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--workers", type=int, default=None,
                     help="parallel worker count (default: cpu count)")
+    ap.add_argument("--fabric-nodes", type=int, default=2,
+                    help="localhost fabric node agents (0 disables the "
+                         "fabric leg)")
     args = ap.parse_args(argv)
 
     spec = bench_spec(args.quick)
@@ -111,6 +162,13 @@ def main(argv=None) -> dict:
     cpus = os.cpu_count() or 1
     lanes = n_workers + (1 if cpus > n_workers else 0)
 
+    fabric = {}
+    if args.fabric_nodes > 0:
+        # free the pool's workers first: fabric agents are their own
+        # processes and a 1-cpu container can't host both fleets
+        sweep.shutdown_pool()
+        fabric = bench_fabric(spec, serial, args.fabric_nodes)
+
     rows = [
         ["cells", len(serial.cells), ""],
         ["host_cpus", cpus, ""],
@@ -136,9 +194,15 @@ def main(argv=None) -> dict:
         ["per_cell_warm_s_p95",
          round(float(np.percentile(cell_s, 95)), 3), ""],
     ]
+    for k in sorted(fabric):
+        rows.append([k, fabric[k] if not isinstance(fabric[k], bool)
+                     else int(fabric[k]),
+                     "localhost 2-node fabric" if k == "fabric_nodes"
+                     else ""])
     write_csv("sweep_bench.csv", ["metric", "value", "note"], rows)
     bench = {
         "cells": len(serial.cells),
+        "host": host_fingerprint(),
         "workers": parallel.n_workers,
         "host_cpus": cpus,
         "lanes": lanes,
@@ -155,6 +219,7 @@ def main(argv=None) -> dict:
         "bitwise_equal": bool(equal and equal_warm),
         "per_cell_warm_s": round(float(cell_s.mean()), 4),
         "per_cell_warm_s_p95": round(float(np.percentile(cell_s, 95)), 4),
+        **fabric,
     }
     path = os.path.join(REPO_ROOT, "BENCH_sweep.json")
     with open(path, "w") as f:
@@ -172,12 +237,23 @@ def main(argv=None) -> dict:
           f"workers, first grid after bring-up, speedup {speedup:.2f}x)")
     print(f"parallel-warm: {warm.wall_s:7.2f}s  (persistent pool, "
           f"speedup {speedup_warm:.2f}x)")
+    if fabric:
+        print(f"fabric:        {fabric['fabric_wall_s']:7.2f}s  "
+              f"({fabric['fabric_nodes']} localhost nodes, first grid "
+              f"incl. agent bring-up)")
+        print(f"fabric-warm:   {fabric['fabric_warm_wall_s']:7.2f}s  "
+              f"(speedup {fabric['fabric_speedup_warm']:.2f}x, "
+              f"bitwise-equal {fabric['fabric_bitwise_equal']})")
     print(f"bitwise-equal results: {equal and equal_warm}")
     print(f"wrote {path}")
     assert equal, "parallel sweep diverged from serial"
     assert equal_warm, "warm-pool sweep diverged from serial"
+    if fabric:
+        assert fabric["fabric_bitwise_equal"], \
+            "fabric sweep diverged from serial"
     return {"speedup": speedup, "speedup_warm": speedup_warm,
-            "equal": equal and equal_warm, "cells": len(serial.cells)}
+            "equal": equal and equal_warm, "cells": len(serial.cells),
+            **fabric}
 
 
 if __name__ == "__main__":

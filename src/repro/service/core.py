@@ -143,7 +143,9 @@ class PredictionService:
             "snapshots": 0, "ticks": 0, "batch_rows": 0, "sheds": 0,
             "rejected": 0, "degraded_answers": 0, "retrains": 0,
             "promotions": 0, "rollbacks": 0, "candidates_rejected": 0,
+            "retrain_failures": 0,
         }
+        self.last_retrain_error: str | None = None
         self.store = None
         if cfg.ckpt_dir:
             self.store = VersionStore(cfg.ckpt_dir)
@@ -230,6 +232,17 @@ class PredictionService:
         self.stats_counters["promotions"] += 1
         report.update(promoted=True, version=new_version)
         return report
+
+    def note_retrain_failure(self, exc: BaseException) -> None:
+        """Record a retrain cycle that raised: a poisoned replay buffer
+        (or any fit/eval crash) used to clear ``_retrain_due`` and
+        vanish without a trace — now it shows up in ``stats()`` as
+        ``retrain_failures`` + ``last_retrain_error`` while the
+        retrainer thread keeps running."""
+        with self.lock:
+            self.stats_counters["retrain_failures"] += 1
+            self.last_retrain_error = f"{type(exc).__name__}: {exc}"
+            self._retrain_due = False
 
     def rollback_now(self) -> dict:
         """Instant rollback to the previous promoted version."""
@@ -513,6 +526,7 @@ class PredictionService:
                     *(t.predictor.buckets_used
                       for t in self.tenants.values()), set())),
                 "compile_count": self.model.compile_count,
+                "last_retrain_error": self.last_retrain_error,
                 **self.stats_counters,
             }
 

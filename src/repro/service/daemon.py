@@ -194,8 +194,12 @@ class ServiceDaemon:
             if self.service._retrain_due:
                 try:
                     self.service.retrain_now()
-                except Exception:
-                    self.service._retrain_due = False
+                except Exception as e:
+                    # never kill the retrainer thread — but never
+                    # swallow the failure either: it lands in stats()
+                    # (retrain_failures + last_retrain_error) and the
+                    # due-flag clears so a poisoned buffer can't spin
+                    self.service.note_retrain_failure(e)
 
     # ------------------------------ convenience -------------------------
 

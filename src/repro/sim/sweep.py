@@ -46,7 +46,9 @@ import dataclasses
 import multiprocessing
 import os
 import pickle
+import signal
 import time
+import warnings
 
 import numpy as np
 
@@ -121,6 +123,14 @@ class SweepSpec:
         for f in ("techniques", "seeds", "scenarios", "overrides",
                   "metrics", "pretrain_knobs"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
+        # an empty grid axis used to surface as a bare IndexError deep
+        # inside warm_pool_caches (spec.seeds[0]) or a silently empty
+        # CSV from run() — fail at construction, naming the field
+        for f in ("techniques", "seeds", "scenarios"):
+            if not getattr(self, f):
+                raise ValueError(
+                    f"SweepSpec.{f} must be a non-empty tuple — an "
+                    f"empty {f} grid axis means zero cells")
         # fail fast, before any worker is spawned: an unknown technique
         # (ValueError listing registered names) or scenario (KeyError)
         # should abort the sweep at spec-construction time
@@ -316,6 +326,7 @@ def run_cell(spec: SweepSpec, scenario: str, technique: str, seed: int,
     guarantee lives here.  ``pretrained`` optionally carries the parent's
     broadcast policy bytes (identical to what local pretraining would
     produce, so purity is preserved)."""
+    _maybe_kill_for_test(scenario, technique, seed)
     cfg = spec.cell_config(scenario, seed)
     pcfg = None
     if spec.shared_pretrain and spec.overrides:
@@ -396,8 +407,62 @@ def _worker_init(worker_seq=None, pin_cores: bool = False) -> None:
 
 def _worker_warmup() -> bool:
     """No-op readiness probe: completes once the worker finished
-    ``_worker_init`` and is pulling from the call queue."""
+    ``_worker_init`` and is pulling from the call queue.  (The
+    ``REPRO_TEST_FAIL_WARMUP`` escape hatch exists so tests can force
+    the failed-warmup scheduling path without crashing real workers.)"""
+    if os.environ.get("REPRO_TEST_FAIL_WARMUP"):
+        raise RuntimeError("forced warmup failure (REPRO_TEST_FAIL_WARMUP)")
     return True
+
+
+_WARMUP_WARNED = False
+
+
+def _ready_lanes(warmups) -> int:
+    """Count the worker lanes that are actually live: warmup futures
+    that completed *successfully*.  A future whose ``_worker_warmup``
+    raised (or was cancelled) is ``done()`` too — counting those as
+    ready made the parent over-submit 2x deep to lanes that never
+    primed.  Failed warmups surface as a one-time RuntimeWarning."""
+    global _WARMUP_WARNED
+    ready = failed = 0
+    for f in warmups:
+        if not f.done():
+            continue
+        if f.cancelled() or f.exception() is not None:
+            failed += 1
+        else:
+            ready += 1
+    if failed and not _WARMUP_WARNED:
+        _WARMUP_WARNED = True
+        warnings.warn(
+            f"{failed} sweep worker warmup(s) failed or were cancelled; "
+            f"submitting only to the {ready} lane(s) that primed",
+            RuntimeWarning, stacklevel=2)
+    return ready
+
+
+def _maybe_kill_for_test(scenario: str, technique: str, seed: int) -> None:
+    """Fault-injection hook for the broken-pool / fabric-reclaim tests:
+    ``REPRO_TEST_KILL_CELL=scenario:technique:seed:marker_path`` makes
+    the FIRST worker process to run that cell SIGKILL itself (the
+    marker file arms exactly one kill, so the rerun after recovery
+    completes).  Never fires in the parent process, and never in
+    production (env var unset)."""
+    target = os.environ.get("REPRO_TEST_KILL_CELL")
+    if not target:
+        return
+    sc, tech, sd, marker = target.split(":", 3)
+    if (sc, tech, int(sd)) != (scenario, technique, seed):
+        return
+    if multiprocessing.current_process().name == "MainProcess":
+        return
+    try:
+        fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return                      # already killed once: run normally
+    os.close(fd)
+    os.kill(os.getpid(), signal.SIGKILL)
 
 
 # ------------------------------- results -----------------------------------
@@ -501,6 +566,7 @@ _POOL_READY: list = []
 
 def _pool(n_workers: int) -> cf.ProcessPoolExecutor:
     global _POOL, _POOL_WORKERS, _POOL_ATEXIT_REGISTERED, _POOL_READY
+    global _WARMUP_WARNED
     if _POOL is not None and _POOL_WORKERS != n_workers:
         _POOL.shutdown(wait=True)
         _POOL = None
@@ -521,6 +587,7 @@ def _pool(n_workers: int) -> cf.ProcessPoolExecutor:
         _POOL_WORKERS = n_workers
         _POOL_READY = [_POOL.submit(_worker_warmup)
                        for _ in range(n_workers)]
+        _WARMUP_WARNED = False      # fresh pool: fresh failure report
     return _POOL
 
 
@@ -598,10 +665,16 @@ def _schedule_units(spec: SweepSpec, n_workers: int) -> list[tuple]:
     return units
 
 
-def run(spec: SweepSpec) -> SweepResult:
+def run(spec: SweepSpec, *, fabric=None) -> SweepResult:
     """Execute the sweep grid; parallel over the persistent spawned process
     pool unless ``spec.max_workers <= 1``. Cell order in the result is
     deterministic (scenario-major, as produced by ``spec.cells()``).
+
+    ``fabric`` accepts a started :class:`repro.sim.fabric.
+    FabricCoordinator`: the grid is then served to its remote node
+    agents instead of the local pool — same units, same payloads, same
+    bitwise guarantee (every cell stays a pure function of the spec,
+    wherever it runs).
 
     Parallel scheduling (all bitwise-neutral — every cell is a pure
     function of the spec, wherever it runs):
@@ -616,6 +689,8 @@ def run(spec: SweepSpec) -> SweepResult:
         steals back not-yet-started submissions — a cold-pool sweep is
         never slower than running serially.
     """
+    if fabric is not None:
+        return fabric.run_grid(spec)
     enable_compile_cache()
     cells = spec.cells()
     n_workers = spec.max_workers
@@ -698,7 +773,7 @@ def run(spec: SweepSpec) -> SweepResult:
         # enters the executor's call queue and can never be cancelled
         # back, so only feed live workers (2x deep to avoid starvation
         # while the parent is busy with its own unit)
-        ready = sum(f.done() for f in _POOL_READY)
+        ready = _ready_lanes(_POOL_READY)
         while units and ready and len(futures) < 2 * ready:
             submit(units.popleft())
         if units and (ready == 0 or spare_cores):

@@ -495,3 +495,43 @@ def test_wall_clock_retrain_trigger_end_to_end(tmp_path):
             _time.sleep(0.05)
         assert svc.stats()["retrains"] >= 1
         assert svc.model_version == 1, "wall-clock trigger never promoted"
+
+
+def test_retrain_failure_counted_and_retrainer_survives(tmp_path,
+                                                        monkeypatch):
+    """A retrain that raises must not kill the retrainer thread or
+    vanish silently: stats() grows ``retrain_failures`` and
+    ``last_retrain_error``, the due-flag clears (no hot spin on a
+    poisoned buffer), and the *next* period still fires."""
+    import time as _time
+    t = {"now": 0.0}
+    cfg = ServiceConfig(profile=profile(), ckpt_dir=str(tmp_path),
+                        min_train_pairs=6, eval_holdback=3,
+                        train_epochs=2, train_lr=1e-4,
+                        retrain_every=0, retrain_interval_s=30.0)
+    with ServiceDaemon(cfg, port=None,
+                       retrain_clock=lambda: t["now"]) as d:
+        svc = d.service
+        assert svc.stats()["retrain_failures"] == 0
+        assert svc.stats()["last_retrain_error"] is None
+
+        def boom():
+            raise RuntimeError("forced retrain failure")
+        monkeypatch.setattr(svc, "retrain_now", boom)
+        t["now"] = 31.0                # cross the first period
+        deadline = _time.monotonic() + 10.0
+        while (svc.stats()["retrain_failures"] == 0
+               and _time.monotonic() < deadline):
+            _time.sleep(0.05)
+        st = svc.stats()
+        assert st["retrain_failures"] >= 1
+        assert "forced retrain failure" in st["last_retrain_error"]
+        assert not svc._retrain_due    # cleared: no hot retry spin
+        assert d._retrainer.is_alive(), "retrainer thread died"
+        seen = st["retrain_failures"]
+        t["now"] = 62.0                # next period: thread still serving
+        deadline = _time.monotonic() + 10.0
+        while (svc.stats()["retrain_failures"] <= seen
+               and _time.monotonic() < deadline):
+            _time.sleep(0.05)
+        assert svc.stats()["retrain_failures"] > seen

@@ -318,3 +318,130 @@ def test_fit_pareto_np_matches_jax_twin():
         a_j, b_j = pareto.fit_pareto(times)
         assert float(a_np) == pytest.approx(float(a_j), rel=1e-5)
         assert float(b_np) == pytest.approx(float(b_j), rel=1e-6)
+
+
+# --------------------- grid validation + pool hardening ---------------------
+
+@pytest.mark.parametrize("field", ["techniques", "seeds", "scenarios"])
+def test_empty_grid_axis_rejected_at_construction(field):
+    """An empty axis used to surface as a bare IndexError deep inside
+    warm_pool_caches (spec.seeds[0]); now it's a ValueError naming the
+    field, raised before any worker spawns."""
+    kw = dict(techniques=("none",), seeds=(0,), scenarios=("planetlab",))
+    kw[field] = ()
+    with pytest.raises(ValueError, match=field):
+        SweepSpec(**kw)
+
+
+def test_ready_lanes_counts_only_successful_warmups(monkeypatch):
+    """A warmup future that raised or was cancelled is ``done()`` too —
+    the readiness gate must not count it as a live lane (it used to,
+    over-submitting to lanes that never primed).  Failures surface as a
+    one-time RuntimeWarning."""
+    import concurrent.futures as cf
+    import warnings
+
+    monkeypatch.setattr(sweep, "_WARMUP_WARNED", False)
+    ok = cf.Future()
+    ok.set_result(True)
+    bad = cf.Future()
+    bad.set_exception(RuntimeError("warmup exploded"))
+    cancelled = cf.Future()
+    cancelled.cancel()
+    pending = cf.Future()
+    with pytest.warns(RuntimeWarning, match="warmup"):
+        assert sweep._ready_lanes([ok, bad, cancelled, pending]) == 1
+    with warnings.catch_warnings():      # warned once, not per poll
+        warnings.simplefilter("error")
+        assert sweep._ready_lanes([ok, bad, cancelled, pending]) == 1
+
+
+def test_all_warmups_failed_falls_back_to_parent(monkeypatch):
+    """Every lane's warmup raising (REPRO_TEST_FAIL_WARMUP) must leave
+    the parallel path degraded-but-correct: the parent runs the whole
+    grid itself, warns once, and stays bitwise-equal to serial."""
+    import concurrent.futures as cf
+
+    spec = _tiny_spec()
+    serial = run(spec)
+    monkeypatch.setenv("REPRO_TEST_FAIL_WARMUP", "1")
+    sweep.shutdown_pool()                # fresh pool inherits the env
+    try:
+        sweep._pool(2)
+        # warmups must have *resolved* (failed) before run() for the
+        # warning to fire deterministically — tiny cells beat spawn
+        cf.wait(sweep._POOL_READY, timeout=120)
+        with pytest.warns(RuntimeWarning, match="warmup"):
+            parallel = run(dataclasses.replace(spec, max_workers=2))
+    finally:
+        sweep.shutdown_pool()            # don't leak poisoned workers
+    assert len(parallel.cells) == len(spec.cells())
+    for a, b in zip(serial.cells, parallel.cells):
+        assert _det(a.summary) == _det(b.summary)
+
+
+def test_worker_killed_mid_grid_recovers_bitwise(tmp_path, monkeypatch):
+    """SIGKILL a pool worker mid-cell (harvest-time BrokenProcessPool,
+    the sweep twin of the fabric node-kill test): the parent reruns the
+    lost unit, respawns the pool, and the full grid still lands
+    bitwise-equal to serial."""
+    spec = _tiny_spec()
+    serial = run(spec)
+    marker = tmp_path / "pool-killed-once"
+    # target the FIRST unit submitted: warm idle workers pick it up
+    # immediately, so the parent can neither run it inline nor steal it
+    # back (running futures refuse cancel) — the kill is deterministic
+    monkeypatch.setenv("REPRO_TEST_KILL_CELL",
+                       f"planetlab:none:0:{marker}")
+    sweep.shutdown_pool()                # fresh pool inherits the env
+    try:
+        # pre-warm so every unit goes to workers (a cold 1-cpu box would
+        # otherwise run the kill cell in the parent, which never kills)
+        sweep.warm_pool(2)
+        parallel = run(dataclasses.replace(spec, max_workers=2))
+    finally:
+        sweep.shutdown_pool()            # recycle the armed workers
+    assert marker.exists(), "the kill drill never fired in a worker"
+    assert len(parallel.cells) == len(spec.cells())
+    for a, b in zip(serial.cells, parallel.cells):
+        assert (a.scenario, a.technique, a.seed) == (b.scenario,
+                                                     b.technique, b.seed)
+        assert _det(a.summary) == _det(b.summary), (a.scenario,
+                                                    a.technique, a.seed)
+
+
+def test_submit_time_broken_pool_recovers(monkeypatch):
+    """Force ``pool.submit`` itself to raise BrokenProcessPool (the pool
+    broke while the parent was busy elsewhere): the unit runs in the
+    parent, the pool respawns, and the grid completes bitwise-equal."""
+    import concurrent.futures as cf
+
+    spec = _tiny_spec()
+    serial = run(spec)
+    sweep.shutdown_pool()
+    real_pool = sweep._pool
+    tripped = {"n": 0}
+
+    class _Brittle:
+        def __init__(self, p):
+            self._p = p
+
+        def submit(self, *a, **kw):
+            if tripped["n"] == 0:
+                tripped["n"] = 1
+                raise cf.process.BrokenProcessPool("forced submit failure")
+            return self._p.submit(*a, **kw)
+
+    monkeypatch.setattr(sweep, "_pool",
+                        lambda n: _Brittle(real_pool(n)))
+    try:
+        # warm first so the readiness gate reaches submit() at all on a
+        # 1-cpu box (ready == 0 would keep the parent running inline)
+        sweep.warm_pool(2)
+        parallel = run(dataclasses.replace(spec, max_workers=2))
+    finally:
+        sweep.shutdown_pool()
+    assert tripped["n"] == 1, "submit-time recovery never exercised"
+    assert len(parallel.cells) == len(spec.cells())
+    for a, b in zip(serial.cells, parallel.cells):
+        assert _det(a.summary) == _det(b.summary)
