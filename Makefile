@@ -3,7 +3,7 @@
 PY := python
 
 .PHONY: test test-all lint sweep-bench engine-bench kernel-bench bench \
-	regen-golden nightly-grid serve serve-bench
+	regen-golden nightly-grid serve serve-bench chaos chaos-drill
 
 test:  ## fast lane: what CI runs (slow-marked distributed tests excluded)
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -13,6 +13,12 @@ lint:  ## ruff lane (configured in ruff.toml; pip install ruff)
 
 test-all:  ## full tier-1 suite (ROADMAP verify command)
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+chaos:  ## full chaos suite: fault-injection drills + codec property tests
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_chaos.py tests/test_codecs.py
+
+chaos-drill:  ## seeded acceptance drills outside pytest -> artifacts/chaos/
+	PYTHONPATH=src $(PY) benchmarks/chaos_drill.py --seeds $${REPRO_CHAOS_SEEDS:-0}
 
 sweep-bench:  ## serial vs cold/warm-pool sweep benchmark -> BENCH_sweep.json
 	PYTHONPATH=src $(PY) benchmarks/sweep_bench.py

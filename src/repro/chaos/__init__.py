@@ -1,0 +1,29 @@
+"""Deterministic fault injection for the distributed surfaces.
+
+START's thesis is that distributed systems must anticipate slow and
+failed components; this package lets the repo prove its *own* two
+distributed stacks do — by injecting the failures on purpose, from a
+seeded schedule, and asserting the system-level invariants survive:
+
+  * :class:`~repro.chaos.proxy.ChaosProxy` — an in-process TCP proxy
+    that sits between a client and an upstream server and injects
+    drop / delay / duplicate / truncate / corrupt / reset-mid-frame
+    faults per direction, driven by seeded per-stream RNGs (plus
+    optional exact per-chunk scripts), recording the realized fault
+    schedule as a JSON artifact for replay and bug reports;
+  * :class:`~repro.chaos.clock.SkewClock` — an injectable monotonic
+    clock with controllable skew, for driving lease expiry
+    (``FabricCoordinator(clock=...)``) and wall-clock retrain timers
+    (``RetrainScheduler(clock=...)``) without real sleeps.
+
+The chaos drills in ``tests/test_chaos.py`` and the standalone driver
+``benchmarks/chaos_drill.py`` use both to enforce the headline
+invariants: a fabric grid stays bitwise-equal to serial under frame
+corruption, mid-frame resets, a node SIGKILL and a longer-than-lease
+stall; a service tenant survives a daemon kill-and-restart mid-stream
+with no snapshot applied twice.
+"""
+from repro.chaos.clock import SkewClock
+from repro.chaos.proxy import ChaosProxy, FaultPlan
+
+__all__ = ["ChaosProxy", "FaultPlan", "SkewClock"]

@@ -32,6 +32,7 @@ estimate — and carry ``"degraded": true``.
 from __future__ import annotations
 
 import dataclasses
+import hmac
 import threading
 from collections import deque
 
@@ -71,6 +72,12 @@ class ServiceConfig:
     #: still get periodically refreshed models.  Missed periods (e.g. a
     #: long fit) coalesce into one firing, never a backlog burst.
     retrain_interval_s: float = 0.0
+    #: shared-secret admission token (None = open).  When set, a
+    #: ``hello`` must carry ``token`` equal to it or admission fails
+    #: with ``auth-failed`` — the JSON-lines mirror of the fabric's
+    #: ``REPRO_FABRIC_KEY`` frame auth.  The daemon defaults this from
+    #: ``REPRO_SERVICE_TOKEN``.
+    auth_token: str | None = None
     seed: int = 0
     use_pallas: bool = False
 
@@ -105,6 +112,10 @@ class TenantState:
             score_on=p.score_on, hysteresis=p.hysteresis,
             cooldown=p.cooldown, predictor=self.predictor)
         self.last_seq = float("-inf")
+        #: ``(seq, answer)`` of the last resolved snapshot: a client
+        #: that lost the connection mid-reply resends the same seq and
+        #: gets this cached answer back instead of a second application
+        self.last_answer: tuple[float, dict] | None = None
         self.mt_cache: dict[int, np.ndarray] = {}  # job -> true M_T rows
         self.durations: deque = deque(maxlen=512)  # degraded-mode MLE
         self.snapshots = 0
@@ -143,7 +154,7 @@ class PredictionService:
             "snapshots": 0, "ticks": 0, "batch_rows": 0, "sheds": 0,
             "rejected": 0, "degraded_answers": 0, "retrains": 0,
             "promotions": 0, "rollbacks": 0, "candidates_rejected": 0,
-            "retrain_failures": 0,
+            "retrain_failures": 0, "resends": 0, "auth_failures": 0,
         }
         self.last_retrain_error: str | None = None
         self.store = None
@@ -264,7 +275,14 @@ class PredictionService:
 
     # ------------------------------ admission --------------------------
 
-    def hello(self, tenant: str, profile_wire: dict) -> dict:
+    def hello(self, tenant: str, profile_wire: dict,
+              token: str | None = None) -> dict:
+        if self.cfg.auth_token is not None:
+            if not (isinstance(token, str) and hmac.compare_digest(
+                    token, self.cfg.auth_token)):
+                self.stats_counters["auth_failures"] += 1
+                return error("auth-failed",
+                             "missing or wrong admission token")
         try:
             prof = Profile.from_wire(profile_wire)
         except (TypeError, ValueError) as e:
@@ -307,6 +325,26 @@ class PredictionService:
                 p.resolve(error("not-admitted",
                                 f"unknown tenant {tenant!r}; hello first"))
                 return p
+            # resend dedupe (checked before the sanitizer, whose
+            # out-of-order rule would reject the repeated seq): a client
+            # that lost the connection after the server applied its
+            # snapshot but before the reply landed resends the same seq
+            # — answer from the cache / the in-flight entry so the rows
+            # are never ingested twice.
+            seq = snap.get("seq")
+            if isinstance(seq, (int, float)) and not isinstance(seq, bool):
+                if (t.last_answer is not None
+                        and float(seq) == t.last_answer[0]):
+                    self.stats_counters["resends"] += 1
+                    p.resolve({**t.last_answer[1], "resent": True})
+                    return p
+                for q in self.pending:
+                    if (q.tenant == tenant
+                            and isinstance(q.snap.get("seq"), (int, float))
+                            and float(q.snap["seq"]) == float(seq)):
+                        # still queued: ride the in-flight entry
+                        self.stats_counters["resends"] += 1
+                        return q
             try:
                 clean = sanitize_snapshot(snap, self.profile, t.last_seq,
                                           mode=self.cfg.sanitize)
@@ -352,6 +390,9 @@ class PredictionService:
                 self._ingest(self.tenants[p.tenant], p.snap)
             results = self._answer(batch)
             for p, res in zip(batch, results):
+                t = self.tenants.get(p.tenant)
+                if t is not None:
+                    t.last_answer = (p.snap["seq"], res)
                 p.resolve(res)
             self._since_retrain += len(batch)
             if (self.cfg.retrain_every
@@ -541,7 +582,8 @@ class PredictionService:
         op = msg.get("op")
         if op == "hello":
             return self.hello(str(msg.get("tenant", "")),
-                              msg.get("profile") or {})
+                              msg.get("profile") or {},
+                              token=msg.get("token"))
         if op == "snapshot":
             p = self.submit(str(msg.get("tenant", "")), msg)
             if auto_tick and not p.event.is_set():

@@ -21,8 +21,12 @@ identical surface, so swapping transports is a one-line change.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import random
 import socket
 import socketserver
+import sys
 import threading
 import time
 
@@ -68,7 +72,19 @@ class RetrainScheduler:
 class _Handler(socketserver.StreamRequestHandler):
     def handle(self) -> None:
         svc: PredictionService = self.server.service  # type: ignore
+        self.server.track(self.connection)            # type: ignore
         for msg in protocol.recv_lines(self.rfile):
+            if msg is protocol.OVERSIZE:
+                # a peer that never sends \n: answer once and drop the
+                # connection — the stream cannot be resynchronized
+                try:
+                    self.wfile.write(protocol.encode(protocol.error(
+                        "frame-too-long",
+                        f"line exceeded {protocol.MAX_LINE} bytes")))
+                    self.wfile.flush()
+                except (BrokenPipeError, ConnectionResetError):
+                    pass
+                return
             if msg is None:
                 resp = protocol.error("bad-frame", "not a JSON object")
             else:
@@ -90,6 +106,41 @@ class _Server(socketserver.ThreadingTCPServer):
     allow_reuse_address = True
     daemon_threads = True
 
+    def handle_error(self, request, client_address):
+        # A peer that vanishes mid-request (crash, injected RST) is an
+        # expected event for a long-running daemon, not a bug worth a
+        # traceback on stderr; everything else keeps the default dump.
+        exc = sys.exc_info()[1]
+        if isinstance(exc, (ConnectionError, BrokenPipeError)):
+            return
+        super().handle_error(request, client_address)
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+
+    def track(self, sock) -> None:
+        with self._conns_lock:
+            self._conns.add(sock)
+
+    def close_all_connections(self) -> None:
+        """Sever live client connections so a stopping daemon looks
+        dead to its tenants immediately — reconnecting clients fail
+        over to the restarted instance instead of hanging on a socket
+        whose handler thread will never answer again."""
+        with self._conns_lock:
+            conns, self._conns = self._conns, set()
+        for sock in conns:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+
 
 class ServiceDaemon:
     """Long-running serving process (in one Python process).
@@ -108,6 +159,10 @@ class ServiceDaemon:
     def __init__(self, cfg: ServiceConfig, host: str = "127.0.0.1",
                  port: int | None = 0, batch_window: float = 0.002,
                  timeout_s: float = 30.0, retrain_clock=None):
+        if cfg.auth_token is None:
+            token = os.environ.get("REPRO_SERVICE_TOKEN")
+            if token:
+                cfg = dataclasses.replace(cfg, auth_token=token)
         self.service = PredictionService(cfg)
         self.retrain_scheduler = RetrainScheduler(
             getattr(cfg, "retrain_interval_s", 0.0),
@@ -154,6 +209,7 @@ class ServiceDaemon:
         self._kick.set()
         if self._server is not None:
             self._server.shutdown()
+            self._server.close_all_connections()
             self._server.server_close()
         self._worker.join(timeout=5)
         self._retrainer.join(timeout=5)
@@ -218,9 +274,12 @@ class LocalClient:
     worker is running (plain ``PredictionService`` use)."""
 
     def __init__(self, service: PredictionService, tenant: str,
-                 auto_tick: bool | None = None):
+                 auto_tick: bool | None = None,
+                 token: str | None = None):
         self.service = service
         self.tenant = tenant
+        self.token = (token if token is not None
+                      else os.environ.get("REPRO_SERVICE_TOKEN"))
         if auto_tick is None:
             # a daemon replaces service.submit with a kicking wrapper
             # (a plain function, not a bound method); its batch worker
@@ -234,8 +293,11 @@ class LocalClient:
                                    timeout=timeout)
 
     def hello(self, profile) -> dict:
-        return self.request({"op": "hello", "tenant": self.tenant,
-                             "profile": profile.to_wire()})
+        msg = {"op": "hello", "tenant": self.tenant,
+               "profile": profile.to_wire()}
+        if self.token is not None:
+            msg["token"] = self.token
+        return self.request(msg)
 
     def snapshot(self, snap: dict) -> dict:
         snap = dict(snap)
@@ -259,27 +321,159 @@ class LocalClient:
         pass
 
 
+#: ops the client may safely resend after a transport failure: hello is
+#: a rejoin, snapshots are seq-deduped server-side (a retried snapshot
+#: is answered from the cached response, never applied twice), stats
+#: and bye are read-only/terminal.  retrain and rollback are NOT here —
+#: resending either could run the state machine twice.
+_RETRY_SAFE = frozenset({"hello", "snapshot", "stats", "bye"})
+
+#: server answers that mean "your request never arrived intact" — safe
+#: to resend a retry-safe op on the same connection
+_TRANSPORT_ERRORS = frozenset({"bad-frame", "frame-too-long"})
+
+
 class ServiceClient:
-    """Blocking JSON-lines TCP client (one socket, ordered replies)."""
+    """Reconnecting JSON-lines TCP client (one socket, ordered replies).
+
+    Transport failures — connection reset, EOF, an undecodable reply, a
+    server-side ``bad-frame`` answer — are healed transparently for
+    retry-safe ops: the client redials with capped exponential backoff
+    plus jitter, replays its ``hello`` (the server treats it as a
+    rejoin), and resends the request.  Snapshots are tagged with the
+    tenant's ``seq``, and the server caches its last answer per tenant,
+    so a resend of an already-applied snapshot returns the cached
+    answer instead of being applied twice.  ``retrain``/``rollback``
+    are never resent; a failure there surfaces as ``ConnectionError``.
+
+    ``request(timeout=...)`` applies a **per-request socket timeout**;
+    on expiry the connection is dropped (a late reply would desync the
+    stream) and ``TimeoutError`` is raised.
+    """
 
     def __init__(self, host: str, port: int, tenant: str,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, token: str | None = None,
+                 retries: int = 3, backoff_s: float = 0.1,
+                 backoff_cap_s: float = 2.0):
+        self.host, self.port = host, int(port)
         self.tenant = tenant
-        self._sock = socket.create_connection((host, port),
-                                              timeout=timeout)
+        self.token = (token if token is not None
+                      else os.environ.get("REPRO_SERVICE_TOKEN"))
+        self.timeout = float(timeout)
+        self.retries = max(1, int(retries))
+        self.backoff_s = float(backoff_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self._rng = random.Random(f"{tenant}@{host}:{port}")
+        self._profile_wire: dict | None = None
+        self._sock = None
+        self._file = None
+        self._dial()
+
+    # ------------------------------ transport ---------------------------
+
+    def _dial(self) -> None:
+        self._sock = socket.create_connection((self.host, self.port),
+                                              timeout=self.timeout)
         self._file = self._sock.makefile("rwb")
 
-    def request(self, msg: dict, timeout: float | None = None) -> dict:
-        self._file.write(protocol.encode(msg))
-        self._file.flush()
-        line = self._file.readline()
+    def _drop(self) -> None:
+        for o in (self._file, self._sock):
+            try:
+                if o is not None:
+                    o.close()
+            except OSError:
+                pass
+        self._file = self._sock = None
+
+    def _backoff(self, attempt: int) -> float:
+        base = min(self.backoff_s * (2.0 ** attempt), self.backoff_cap_s)
+        return base * (0.5 + 0.5 * self._rng.random())
+
+    def _reconnect(self) -> None:
+        last: Exception | None = None
+        for attempt in range(self.retries):
+            try:
+                self._dial()
+                if self._profile_wire is not None:
+                    # rejoin before resuming traffic: a restarted daemon
+                    # has no tenant state until it sees our hello again
+                    resp = self._roundtrip(self._hello_msg(), None)
+                    if not resp.get("ok"):
+                        raise ConnectionError(
+                            f"rejoin refused: {resp.get('error')}")
+                return
+            except (OSError, ValueError) as e:
+                last = e
+                self._drop()
+                time.sleep(self._backoff(attempt))
+        raise ConnectionError(
+            f"service {self.host}:{self.port} unreachable") from last
+
+    def _roundtrip(self, msg: dict, timeout: float | None) -> dict:
+        if self._file is None:
+            raise ConnectionError("not connected")
+        if timeout is not None:
+            self._sock.settimeout(timeout)
+        try:
+            self._file.write(protocol.encode(msg))
+            self._file.flush()
+            line = self._file.readline(protocol.MAX_LINE + 1)
+        finally:
+            if timeout is not None and self._sock is not None:
+                try:
+                    self._sock.settimeout(self.timeout)
+                except OSError:
+                    pass
         if not line:
             raise ConnectionError("service closed the connection")
-        return protocol.decode(line)
+        return protocol.decode(line)     # ValueError on corrupt reply
+
+    # ------------------------------ requests ----------------------------
+
+    def request(self, msg: dict, timeout: float | None = None) -> dict:
+        retry_safe = msg.get("op") in _RETRY_SAFE
+        tries = self.retries if retry_safe else 1
+        last: Exception | None = None
+        for attempt in range(tries):
+            if self._file is None:
+                self._reconnect()
+            try:
+                resp = self._roundtrip(msg, timeout)
+            except TimeoutError:
+                # the reply may still arrive later and desync every
+                # following request on this stream: drop the connection
+                self._drop()
+                raise
+            except (ConnectionError, ValueError, OSError) as e:
+                last = e
+                self._drop()
+                if attempt == tries - 1:
+                    break
+                continue
+            if (retry_safe and not resp.get("ok", True)
+                    and resp.get("error") in _TRANSPORT_ERRORS
+                    and attempt < tries - 1):
+                # our frame got mangled in flight; the server never
+                # applied it — resend (frame-too-long also dropped the
+                # connection server-side, the next loop redials)
+                if resp.get("error") == "frame-too-long":
+                    self._drop()
+                continue
+            return resp
+        raise ConnectionError(
+            f"request {msg.get('op')!r} failed after {tries} "
+            f"attempts") from last
+
+    def _hello_msg(self) -> dict:
+        msg = {"op": "hello", "tenant": self.tenant,
+               "profile": self._profile_wire}
+        if self.token is not None:
+            msg["token"] = self.token
+        return msg
 
     def hello(self, profile) -> dict:
-        return self.request({"op": "hello", "tenant": self.tenant,
-                             "profile": profile.to_wire()})
+        self._profile_wire = profile.to_wire()
+        return self.request(self._hello_msg())
 
     def snapshot(self, snap: dict) -> dict:
         snap = dict(snap)
@@ -303,8 +497,4 @@ class ServiceClient:
             self.close()
 
     def close(self) -> None:
-        try:
-            self._file.close()
-            self._sock.close()
-        except OSError:
-            pass
+        self._drop()

@@ -90,11 +90,44 @@ def error(code: str, detail: str) -> dict:
     return {"ok": False, "error": code, "detail": detail}
 
 
-def recv_lines(sock_file):
-    """Yield decoded frames from a file-like until EOF; a bad frame
-    yields ``None`` so the caller can answer with a protocol error
-    instead of dropping the connection."""
-    for raw in sock_file:
+#: hard cap on one JSON line: a peer that never sends ``\n`` must not
+#: grow the read buffer without bound (the JSON-lines mirror of the
+#: fabric's ``MAX_FRAME`` discipline).  Generous for real snapshots —
+#: a 64-host x 64-task per-task profile is well under 1 MiB.
+MAX_LINE = 1 << 20
+
+
+class _Oversize:
+    """Sentinel yielded by :func:`recv_lines` for a line that exceeded
+    ``MAX_LINE`` without a newline: the stream position is now
+    mid-garbage, so the caller must answer with a protocol error and
+    drop the connection (resynchronizing is impossible)."""
+
+    def __repr__(self) -> str:            # pragma: no cover - debug aid
+        return "<protocol.OVERSIZE>"
+
+
+OVERSIZE = _Oversize()
+
+
+def recv_lines(sock_file, max_line: int = MAX_LINE):
+    """Yield decoded frames from a file-like until EOF.
+
+    A syntactically bad frame yields ``None`` (the caller answers with
+    a protocol error and keeps the connection); a line longer than
+    ``max_line`` with no newline yields :data:`OVERSIZE` and stops —
+    the caller must drop the connection after answering.
+    """
+    nl = None
+    while True:
+        raw = sock_file.readline(max_line + 1)
+        if not raw:
+            return
+        if nl is None:
+            nl = b"\n" if isinstance(raw, bytes) else "\n"
+        if len(raw) > max_line and not raw.endswith(nl):
+            yield OVERSIZE
+            return
         if not raw.strip():
             continue
         try:

@@ -46,9 +46,14 @@ runs, results are assembled in ``spec.cells()`` order, so a fabric grid
 is **bitwise-equal to serial** on ``deterministic_summary`` — the
 Tier-0 guarantee, enforced by tests and the bench.
 
-Security: frames are pickle — never expose the coordinator port beyond
-a trusted network (the default bind is loopback; auth on the fabric
-port is a tracked follow-on, see ROADMAP).
+Security: frames are pickle, so the port must never accept bytes from
+an untrusted peer unauthenticated.  Set ``REPRO_FABRIC_KEY`` (same
+value on coordinator and every node) and each frame carries an
+HMAC-SHA256 tag over the payload, verified in constant time **before**
+``pickle.loads`` — a frame with a missing or invalid MAC is rejected
+without ever touching the unpickler.  Without a key the port falls back
+to unauthenticated frames: keep the default loopback bind or a trusted
+network in that mode.
 
 CLI::
 
@@ -60,9 +65,11 @@ from __future__ import annotations
 import argparse
 import concurrent.futures as cf
 import dataclasses
+import hmac
 import json
 import os
 import pickle
+import random
 import socket
 import socketserver
 import struct
@@ -77,19 +84,38 @@ from repro.sim.sweep import SweepResult, SweepSpec
 
 # ------------------------------ wire frames --------------------------------
 
-#: 8-byte big-endian unsigned frame length, then that many pickle bytes.
+#: 8-byte big-endian unsigned frame length, then that many pickle bytes
+#: (with ``REPRO_FABRIC_KEY`` set: a 32-byte HMAC-SHA256 tag, then the
+#: pickle bytes — the tag is length-counted).
 _HDR = struct.Struct(">Q")
 #: refuse absurd frames before allocating (corrupt header / wrong peer)
 MAX_FRAME = 1 << 31
+#: HMAC-SHA256 tag length prepended to authenticated frames
+MAC_LEN = 32
 
 
 class ProtocolError(RuntimeError):
     pass
 
 
-def send_frame(f, obj: dict) -> None:
-    """Write one length-prefixed pickle frame to a binary file-like."""
+def fabric_key(key: bytes | str | None = None) -> bytes | None:
+    """The frame-authentication key: the explicit argument if given,
+    else ``REPRO_FABRIC_KEY`` from the environment, else ``None``
+    (unauthenticated frames — loopback/trusted networks only)."""
+    if key is None:
+        key = os.environ.get("REPRO_FABRIC_KEY")
+    if not key:
+        return None
+    return key.encode() if isinstance(key, str) else bytes(key)
+
+
+def send_frame(f, obj: dict, key: bytes | str | None = None) -> None:
+    """Write one length-prefixed pickle frame to a binary file-like,
+    HMAC-tagged when a key is configured."""
     data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    k = fabric_key(key)
+    if k is not None:
+        data = hmac.new(k, data, "sha256").digest() + data
     f.write(_HDR.pack(len(data)))
     f.write(data)
     f.flush()
@@ -105,8 +131,14 @@ def _read_exact(f, n: int) -> bytes | None:
     return buf
 
 
-def recv_frame(f) -> dict | None:
-    """Read one frame; ``None`` on clean EOF (peer closed)."""
+def recv_frame(f, key: bytes | str | None = None) -> dict | None:
+    """Read one frame; ``None`` on clean EOF (peer closed).
+
+    With a key configured the MAC is verified constant-time **before**
+    ``pickle.loads`` — a missing, short, or invalid tag raises
+    :class:`ProtocolError` and the untrusted bytes never reach the
+    unpickler.
+    """
     hdr = _read_exact(f, _HDR.size)
     if hdr is None:
         return None
@@ -116,7 +148,19 @@ def recv_frame(f) -> dict | None:
     data = _read_exact(f, n)
     if data is None:
         raise ProtocolError("connection dropped mid-frame")
-    obj = pickle.loads(data)
+    k = fabric_key(key)
+    if k is not None:
+        if len(data) < MAC_LEN:
+            raise ProtocolError("frame too short to carry a MAC")
+        tag, data = data[:MAC_LEN], data[MAC_LEN:]
+        if not hmac.compare_digest(
+                tag, hmac.new(k, data, "sha256").digest()):
+            raise ProtocolError("frame MAC missing or invalid")
+    try:
+        obj = pickle.loads(data)
+    except Exception as e:   # corrupt/garbled frame, not a crash
+        raise ProtocolError(
+            f"undecodable frame: {type(e).__name__}: {e}") from e
     if not isinstance(obj, dict) or "op" not in obj:
         raise ProtocolError("frame must be a dict with an 'op'")
     return obj
@@ -560,13 +604,21 @@ class FabricWorker:
 
     def __init__(self, host: str, port: int, node: str | None = None,
                  lanes: int = 1, exit_on_drain: bool = True,
-                 reconnect_tries: int = 20, reconnect_delay_s: float = 0.5):
+                 reconnect_tries: int = 20, reconnect_delay_s: float = 0.5,
+                 backoff_cap_s: float = 5.0, request_tries: int = 4,
+                 io_timeout_s: float = 30.0):
         self.host, self.port = host, int(port)
         self.node = node or f"{socket.gethostname()}-{uuid.uuid4().hex[:8]}"
         self.lanes = max(1, int(lanes))
         self.exit_on_drain = exit_on_drain
         self.reconnect_tries = int(reconnect_tries)
         self.reconnect_delay_s = float(reconnect_delay_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.request_tries = max(1, int(request_tries))
+        self.io_timeout_s = float(io_timeout_s)
+        #: seeded per node name: the jittered backoff sequence replays
+        #: under the chaos harness
+        self._rng = random.Random(self.node)
         self._file = None
         self._io_lock = threading.Lock()
         self._stop = threading.Event()
@@ -580,12 +632,29 @@ class FabricWorker:
 
     # ------------------------------ transport ---------------------------
 
+    def _backoff(self, attempt: int) -> float:
+        """Capped exponential backoff with jitter: retry storms from a
+        fleet of reconnecting nodes must not synchronize on a healing
+        coordinator."""
+        base = min(self.reconnect_delay_s * (2.0 ** attempt),
+                   self.backoff_cap_s)
+        return base * (0.5 + 0.5 * self._rng.random())
+
+    def _drop_conn(self) -> None:
+        with self._io_lock:
+            if self._file is not None:
+                try:
+                    self._file.close()
+                except OSError:
+                    pass
+                self._file = None
+
     def _connect(self) -> None:
         last = None
-        for _ in range(max(1, self.reconnect_tries)):
+        for attempt in range(max(1, self.reconnect_tries)):
             try:
                 sock = socket.create_connection((self.host, self.port),
-                                                timeout=30.0)
+                                                timeout=self.io_timeout_s)
                 self._file = sock.makefile("rwb")
                 resp = self._send_recv({"op": "hello", "node": self.node,
                                         "lanes": self.lanes})
@@ -594,7 +663,7 @@ class FabricWorker:
             except OSError as e:
                 last = e
                 self._file = None
-                if self._stop.wait(self.reconnect_delay_s):
+                if self._stop.wait(self._backoff(attempt)):
                     break
         raise ConnectionError(
             f"coordinator {self.host}:{self.port} unreachable") from last
@@ -609,20 +678,43 @@ class FabricWorker:
             resp = recv_frame(self._file)
         if resp is None:
             raise ConnectionError("coordinator closed the connection")
+        if resp.get("op") == "error":
+            # the coordinator refused the frame (corrupt in flight, MAC
+            # reject, ...) and is about to close: the stream past this
+            # point is unusable, so treat it like a broken connection
+            raise ProtocolError(
+                f"coordinator error: {resp.get('detail', '')}")
         return resp
 
     def _request(self, msg: dict) -> dict:
-        try:
-            return self._send_recv(msg)
-        except (ConnectionError, OSError):
-            self._connect()              # may raise ConnectionError
-            return self._send_recv(msg)
+        """One request with bounded reconnect-and-retry.
+
+        Every fabric op is idempotent on the coordinator — duplicate
+        ``result``s are dropped first-wins, re-``request``s just lease
+        another unit, lost in-flight units come back via lease reclaim
+        — so resending after a corrupt frame, an RST, or a lost
+        response is always safe.
+        """
+        last: Exception | None = None
+        for attempt in range(self.request_tries):
+            if attempt:
+                self._drop_conn()
+                if self._stop.wait(self._backoff(attempt - 1)):
+                    break
+                self._connect()       # ConnectionError when gone for good
+            try:
+                return self._send_recv(msg)
+            except (ConnectionError, ProtocolError, OSError) as e:
+                last = e
+        raise ConnectionError(
+            f"request {msg.get('op')!r} failed after "
+            f"{self.request_tries} attempts") from last
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.wait(max(self._lease_s / 3.0, 0.05)):
             try:
                 self._send_recv({"op": "heartbeat", "node": self.node})
-            except (ConnectionError, OSError):
+            except (ConnectionError, ProtocolError, OSError):
                 pass                     # main loop owns reconnection
 
     # ------------------------------ execution ---------------------------
@@ -765,7 +857,7 @@ class FabricWorker:
             if self._file is not None:
                 self._send_recv({"op": "bye", "node": self.node})
                 self._file.close()
-        except (ConnectionError, OSError):
+        except (ConnectionError, ProtocolError, OSError):
             pass
 
     def stop(self) -> None:
@@ -810,9 +902,10 @@ def main(argv=None) -> int:
     c.add_argument("--spec", required=True,
                    help="SweepSpec fields as JSON")
     c.add_argument("--bind", default="127.0.0.1:0",
-                   help="HOST:PORT (port 0 = pick free; keep loopback "
-                        "unless the network is trusted — frames are "
-                        "pickle)")
+                   help="HOST:PORT (port 0 = pick free; set "
+                        "REPRO_FABRIC_KEY on every machine to "
+                        "HMAC-authenticate frames before binding "
+                        "beyond loopback — frames are pickle)")
     c.add_argument("--lease", type=float, default=60.0)
     c.add_argument("--lanes-hint", type=int, default=8)
     c.add_argument("--ship-cache", action="store_true")

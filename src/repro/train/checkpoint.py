@@ -48,11 +48,29 @@ def save(path: str, step: int, tree, keep: int = 3) -> str:
                 allow_pickle=False)
     with open(os.path.join(stage, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(stage, final)
+    _fsync_dir(path)
     _retain(path, keep)
     return final
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a rename inside it survives power loss —
+    best-effort (not every filesystem lets you open a directory)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _retain(path: str, keep: int) -> None:
@@ -103,7 +121,10 @@ class VersionStore:
     staging dir + atomic rename), so a torn version can never load.  On
     top of the step directories it keeps a ``CURRENT`` json pointer —
     ``{"current": v, "history": [...]}`` written via tmp + rename — that
-    records which version is *serving* and the promotion trail.  A
+    records which version is *serving* and the promotion trail.  The
+    pointer is fsynced before the rename (and the directory after), and
+    a torn/garbage pointer recovers to the newest intact version — see
+    :meth:`_read_ptr`.  A
     version number is the ``save()`` step; saving never changes what is
     served until :meth:`promote` flips the pointer, and
     :meth:`rollback` flips it back to the previous history entry.
@@ -122,17 +143,56 @@ class VersionStore:
 
     # -- pointer ----------------------------------------------------
     def _read_ptr(self) -> dict:
+        """Read the pointer; a torn or garbage ``CURRENT`` (power loss
+        mid-write on a filesystem that reordered the rename past the
+        data blocks) falls back to the newest *intact* saved version
+        instead of raising — the service comes back serving something
+        real rather than refusing to start."""
         p = os.path.join(self.path, self._PTR)
         if not os.path.exists(p):
             return {"current": None, "history": []}
-        with open(p) as f:
-            return json.load(f)
+        try:
+            with open(p) as f:
+                ptr = json.load(f)
+            if (not isinstance(ptr, dict) or "current" not in ptr
+                    or not isinstance(ptr.get("history"), list)):
+                raise ValueError(f"malformed pointer {ptr!r}")
+            return ptr
+        except (ValueError, OSError):
+            return self._recover_ptr()
+
+    def _recover_ptr(self) -> dict:
+        """Newest intact version wins; history is unrecoverable (the
+        trail lived only in the pointer) so rollback starts empty.  The
+        recovered pointer is NOT persisted here — reads stay read-only;
+        the next promote rewrites ``CURRENT`` durably."""
+        for v in sorted(self.versions(), reverse=True):
+            if self._intact(v):
+                return {"current": v, "history": []}
+        return {"current": None, "history": []}
+
+    def _intact(self, version: int) -> bool:
+        """Cheap integrity probe: manifest parses, every leaf file is
+        present with a readable ``.npy`` header."""
+        d = os.path.join(self.path, f"step_{version:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            for i in range(int(manifest["n_leaves"])):
+                np.load(os.path.join(d, f"leaf_{i:05d}.npy"),
+                        mmap_mode="r", allow_pickle=False)
+            return True
+        except Exception:
+            return False
 
     def _write_ptr(self, ptr: dict) -> None:
         tmp = os.path.join(self.path, f".{self._PTR}.tmp")
         with open(tmp, "w") as f:
             json.dump(ptr, f)
+            f.flush()
+            os.fsync(f.fileno())     # data durable BEFORE the rename
         os.replace(tmp, os.path.join(self.path, self._PTR))
+        _fsync_dir(self.path)        # ...and the rename itself durable
 
     def current(self) -> int | None:
         return self._read_ptr()["current"]

@@ -1,0 +1,151 @@
+"""Property tests for both wire codecs (hypothesis; the conftest stub
+degrades these to boundary-example parametrizations when the real
+package is absent).
+
+Covered for the fabric pickle-frame codec and the service JSON-lines
+codec:
+
+  * roundtrip identity over drawn payloads (ints at the struct
+    boundaries, floats including the values JSON treats specially);
+  * truncated header / truncated payload rejection;
+  * oversized declared length rejection (``MAX_FRAME`` / ``MAX_LINE``);
+  * garbage-byte rejection at every drawn offset;
+  * MAC-tampered frames rejected before the payload is deserialized.
+"""
+import io
+import struct
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.service import protocol
+from repro.sim import fabric
+from repro.sim.fabric import ProtocolError, recv_frame, send_frame
+
+_HDR = struct.Struct(">Q")
+
+
+def _framed(obj, key=None) -> bytes:
+    buf = io.BytesIO()
+    send_frame(buf, obj, key=key)
+    return buf.getvalue()
+
+
+# ------------------------------ fabric frames ------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(-(2 ** 62), 2 ** 62), x=st.floats(-1e300, 1e300))
+def test_fabric_frame_roundtrip_identity(n, x):
+    obj = {"op": "t", "n": n, "x": x, "blob": b"\x00\xff" * 4,
+           "nest": {"seq": [n, x]}}
+    assert recv_frame(io.BytesIO(_framed(obj))) == obj
+    assert recv_frame(io.BytesIO(_framed(obj, key=b"k")),
+                      key=b"k") == obj
+
+
+@settings(max_examples=30, deadline=None)
+@given(cut=st.integers(1, 7))
+def test_fabric_truncated_header_is_clean_eof_or_error(cut):
+    raw = _framed({"op": "t"})
+    # a header cut anywhere yields clean EOF (None): the peer closed
+    # between frames as far as the reader can prove
+    assert recv_frame(io.BytesIO(raw[:cut])) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(cut=st.integers(1, 20))
+def test_fabric_truncated_payload_rejected(cut):
+    raw = _framed({"op": "t", "pad": b"x" * 64})
+    assert len(raw) - _HDR.size > cut
+    with pytest.raises(ProtocolError, match="mid-frame"):
+        recv_frame(io.BytesIO(raw[:-cut]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(excess=st.integers(1, 2 ** 30))
+def test_fabric_oversized_length_rejected(excess):
+    hdr = _HDR.pack(fabric.MAX_FRAME + excess)
+    with pytest.raises(ProtocolError, match="MAX_FRAME"):
+        recv_frame(io.BytesIO(hdr + b"x" * 16))
+
+
+@settings(max_examples=50, deadline=None)
+@given(offset=st.integers(0, 200), flip=st.integers(1, 255))
+def test_fabric_garbage_byte_never_escapes_as_data(offset, flip):
+    """Flipping any payload byte must surface as ProtocolError or a
+    changed-but-valid dict — never an unhandled unpickler crash."""
+    obj = {"op": "t", "pad": b"p" * 128, "v": 7}
+    raw = _framed(obj)
+    i = _HDR.size + offset % (len(raw) - _HDR.size)
+    bad = raw[:i] + bytes([raw[i] ^ flip]) + raw[i + 1:]
+    try:
+        out = recv_frame(io.BytesIO(bad))
+    except ProtocolError:
+        return                       # rejected: the hardened path
+    assert isinstance(out, dict) and "op" in out
+
+
+@settings(max_examples=50, deadline=None)
+@given(offset=st.integers(0, 500), flip=st.integers(1, 255))
+def test_fabric_mac_tamper_always_rejected(offset, flip):
+    """With a key, any single-byte tamper of tag or payload is refused
+    at the MAC check — there is no changed-but-valid outcome."""
+    obj = {"op": "t", "pad": b"p" * 128, "v": 7}
+    raw = _framed(obj, key=b"kk")
+    i = _HDR.size + offset % (len(raw) - _HDR.size)
+    bad = raw[:i] + bytes([raw[i] ^ flip]) + raw[i + 1:]
+    with pytest.raises(ProtocolError, match="MAC"):
+        recv_frame(io.BytesIO(bad), key=b"kk")
+
+
+# ------------------------------ service lines ------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(-(2 ** 53), 2 ** 53), x=st.floats(-1e15, 1e15))
+def test_service_line_roundtrip_identity(n, x):
+    obj = {"op": "t", "n": n, "x": x, "s": "π ≤ ∞",
+           "seq": [n, {"y": x}]}
+    line = protocol.encode(obj)
+    assert line.endswith(b"\n")
+    assert protocol.decode(line) == obj
+
+
+@settings(max_examples=20, deadline=None)
+@given(kind=st.sampled_from(["array", "number", "string", "null"]))
+def test_service_decode_rejects_non_objects(kind):
+    payload = {"array": b"[1,2]", "number": b"3", "string": b'"x"',
+               "null": b"null"}[kind]
+    with pytest.raises(ValueError):
+        protocol.decode(payload)
+
+
+@settings(max_examples=30, deadline=None)
+@given(offset=st.integers(0, 100), flip=st.integers(1, 255))
+def test_service_garbage_line_yields_none_never_raises(offset, flip):
+    line = protocol.encode({"op": "t", "pad": "p" * 64})
+    i = offset % (len(line) - 1)         # keep the newline intact
+    bad = line[:i] + bytes([line[i] ^ flip]) + line[i + 1:]
+    got = list(protocol.recv_lines(io.BytesIO(bad)))
+    assert len(got) <= 1
+    for item in got:
+        assert item is None or isinstance(item, dict)
+
+
+@settings(max_examples=10, deadline=None)
+@given(excess=st.integers(1, 4096))
+def test_service_oversize_line_yields_sentinel_and_stops(excess):
+    good = protocol.encode({"op": "ok"})
+    blob = good + b"y" * (protocol.MAX_LINE + excess)  # no newline
+    got = list(protocol.recv_lines(io.BytesIO(blob)))
+    assert got[0] == {"op": "ok"}
+    assert got[-1] is protocol.OVERSIZE
+    assert len(got) == 2                 # generator stopped after it
+
+
+def test_service_oversize_line_with_newline_still_rejected():
+    # even a terminated line past the cap is refused: readline returned
+    # max_line+1 bytes without the newline first
+    blob = b"z" * (protocol.MAX_LINE + 10) + b"\n"
+    got = list(protocol.recv_lines(io.BytesIO(blob)))
+    assert got == [protocol.OVERSIZE]
